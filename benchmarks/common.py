@@ -1,0 +1,17 @@
+"""Shared benchmark utilities: small-shape wall-clock + full-shape modeled
+latency for workload variants."""
+import time
+
+import jax
+
+
+def wallclock_us(fn, inputs, iters=3):
+    fn(*inputs)                                     # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*inputs))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def modeled_ms(workload, directive, hw):
+    return workload.analytic_cost(directive, hw) * 1e3

@@ -1,0 +1,21 @@
+"""Paper Figure 5: KV-cache transfer latency across sequence lengths and KV
+dims — host bundled transfer vs CUCo chained GPU-triggered sends."""
+from repro.core import Directive, extract_hardware_context
+from repro.workloads import get_workload
+
+
+def run(mesh=None):
+    from repro.launch.mesh import make_mesh
+    hw = extract_hardware_context(mesh or make_mesh((1,), ("x",)))
+    rows = []
+    host = Directive("XLA_COLLECTIVE", placement="DEFERRED")
+    cuco = Directive("PALLAS_RDMA", "SIGNAL", "STREAM_SPLIT")
+    for T in (2048, 4096, 8192):
+        for dk in (512, 1024):
+            w = get_workload("kv_transfer", T=T, d=4096, dk=dk)
+            th = w.analytic_cost(host, hw) * 1e3
+            tc = w.analytic_cost(cuco, hw) * 1e3
+            rows.append((f"fig5/kv_T{T}_dk{dk}_host", th * 1e3, ""))
+            rows.append((f"fig5/kv_T{T}_dk{dk}_cuco", tc * 1e3,
+                         f"speedup={th / tc:.3f}x"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Figure 6: GEMM + AllGather across square matrix sizes, intra-node
+(ICI) and inter-node (DCN-rate) links — host all-gather vs CUCo fused
+per-tile broadcast."""
+import dataclasses
+
+from repro.core import Directive, extract_hardware_context
+from repro.core.hardware import V5E
+from repro.workloads import get_workload
+
+
+def run(mesh=None):
+    from repro.launch.mesh import make_mesh
+    hw = extract_hardware_context(mesh or make_mesh((1,), ("x",)))
+    hw_inter = dataclasses.replace(
+        hw, chip=dataclasses.replace(V5E, ici_link_bw=V5E.dcn_bw))
+    rows = []
+    host = Directive("XLA_COLLECTIVE", placement="DEFERRED")
+    cuco = Directive("PALLAS_RDMA", "SIGNAL", "TILE_FUSED",
+                     granularity="PER_TILE", tunables=(("tile_m", 128),))
+    for size in (2048, 4096, 8192):
+        for link, h in (("ici", hw), ("dcn", hw_inter)):
+            w = get_workload("gemm_allgather", n_dev=4, M=size, K=size,
+                             N=size)
+            th = w.analytic_cost(host, h) * 1e3
+            tc = w.analytic_cost(cuco, h) * 1e3
+            rows.append((f"fig6/gemm_ag_{size}_{link}_host", th * 1e3, ""))
+            rows.append((f"fig6/gemm_ag_{size}_{link}_cuco", tc * 1e3,
+                         f"speedup={th / tc:.3f}x"))
+    return rows

@@ -1,0 +1,22 @@
+"""Roofline summary per (arch x shape) from the dry-run artifacts — the
+benchmark view of EXPERIMENTS.md §Roofline (reads artifacts/dryrun)."""
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(mesh=None):
+    rows = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if "skipped" in d or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        name = f"roofline/{d['arch']}__{d['shape']}__{d['mesh']}"
+        rows.append((name, r["step_time_s"] * 1e6,
+                     f"dom={r['dominant']} comp={r['compute_s'] * 1e3:.1f}ms "
+                     f"mem={r['memory_s'] * 1e3:.1f}ms "
+                     f"coll={r['collective_s'] * 1e3:.1f}ms "
+                     f"useful={d['useful_flops_ratio']:.2f}"))
+    return rows

@@ -1,0 +1,38 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # benches exercise real 4-rank collectives (the paper's deployment size);
+    # NOT the 512-device dry-run flag.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("x",))
+    from benchmarks import (fig3_flash_attention, fig4_moe_skew,
+                            fig5_kv_transfer, fig6_gemm_allgather,
+                            table5_moe_phases, fig9_13_ablations,
+                            roofline_cells)
+    modules = [fig3_flash_attention, fig4_moe_skew, fig5_kv_transfer,
+               fig6_gemm_allgather, table5_moe_phases, fig9_13_ablations,
+               roofline_cells]
+    print("name,us_per_call,derived")
+    failures = 0
+    for m in modules:
+        try:
+            for name, us, derived in m.run(mesh):
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{m.__name__},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: build an assigned architecture, train a few steps, serve it.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama3.2-1b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.serve import Engine, ServeConfig
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))     # smoke-sized config, same family
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"pattern={cfg.block_pattern[:4]}...")
+
+    tcfg = TrainConfig(steps=args.steps, global_batch=8, seq_len=64,
+                       log_every=10)
+    losses, _, (params, _) = train(cfg, tcfg)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    eng = Engine(cfg, params, ServeConfig(max_seq=96))
+    batch = {"tokens": np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 16)).astype(np.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = np.zeros((2, cfg.enc_seq, cfg.d_model), np.float32)
+    if cfg.num_patch_tokens:
+        batch["patches"] = np.zeros((2, cfg.num_patch_tokens, cfg.d_model),
+                                    np.float32)
+    toks = eng.generate(batch, 8)
+    print("generated token ids:\n", np.asarray(toks))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests + disaggregated prefill/decode.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-1b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params,
+                 ServeConfig(max_seq=args.prompt_len + args.new_tokens + 1))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size,
+                                    (args.batch, args.prompt_len))
+             .astype(np.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = np.zeros((args.batch, cfg.enc_seq, cfg.d_model),
+                                   np.float32)
+    if cfg.num_patch_tokens:
+        batch["patches"] = np.zeros(
+            (args.batch, cfg.num_patch_tokens, cfg.d_model), np.float32)
+
+    t0 = time.perf_counter()
+    toks = eng.generate(batch, args.new_tokens)
+    dt = time.perf_counter() - t0
+    total = args.batch * args.new_tokens
+    print(f"monolithic: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. compile)")
+
+    # disaggregated: prefill tier -> cache handoff -> decode tier
+    handoff = eng.prefill_remote(batch)
+    toks2 = eng.decode_from_handoff(handoff, args.new_tokens)
+    same = np.array_equal(np.asarray(toks), np.asarray(toks2))
+    print(f"disaggregated prefill/decode equals monolithic: {same}")
+    print("sample output ids:", np.asarray(toks[0][:12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-parameter MoE LM for a few hundred steps
+with sharded execution, checkpointing, preemption-safe restart, and the CUCo
+MoE overlap schedule enabled.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/train_moe_100m.py --steps 300
+
+(On one CPU device it runs unsharded; with the flag it runs 4-way data x
+2-way model parallel.)
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch, reduced
+from repro.models import StepOptions
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_moe_100m")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: granite-moe family scaled between smoke and full size
+    cfg = reduced(
+        get_arch("granite-moe-3b-a800m"),
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1024, moe_d_ff=1024, num_experts=8, experts_per_token=2,
+        vocab_size=32000, pad_to=2, name="granite-moe-100m")
+    n_est = cfg.param_count()
+    print(f"model: {cfg.name}, ~{n_est / 1e6:.0f}M params (analytic)")
+
+    mesh = None
+    if len(jax.devices()) >= 8:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        print("mesh:", dict(mesh.shape))
+
+    tcfg = TrainConfig(
+        steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt, ckpt_every=100, log_every=20,
+        opts=StepOptions(moe_overlap=True))      # CUCo self/remote split
+    losses, last, _ = train(cfg, tcfg, mesh=mesh)
+    print(f"trained to step {last}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"checkpoints in {args.ckpt} — re-run to resume, SIGTERM to "
+          "preempt gracefully")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: CUCo (compute/communication co-design) reproduced as a JAX/TPU
+framework - models, distribution, training/serving substrate, and the
+co-design search engine (repro.core)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced
+from repro.configs.registry import ARCHS, get_arch, get_shape, cells
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "reduced",
+    "ARCHS", "get_arch", "get_shape", "cells",
+]

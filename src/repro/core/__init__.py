@@ -1,0 +1,36 @@
+"""CUCo core: the paper's contribution as a composable JAX module.
+
+Pipeline:  comm_graph.analyze (static analyzer)
+        -> fast_path (correctness-first transformation to a verified seed)
+        -> slow_path (island evolution over the design space C)
+with cascade evaluation, MAP-Elites archive, candidate DB + novelty filter,
+meta-summarizer, and the v5e roofline cost model.
+"""
+from repro.core.design_space import (Directive, CONSERVATIVE, DIMENSIONS,
+                                     EXPERT_SYSTEMS, violations, is_valid,
+                                     random_directive, enumerate_valid)
+from repro.core.hardware import V5E, ChipSpec, HardwareContext, \
+    extract_hardware_context
+from repro.core.cost_model import (RooflineReport, parse_collectives,
+                                   roofline_from_compiled)
+from repro.core.comm_graph import analyze as analyze_comm_graph
+from repro.core.cascade import Candidate, CascadeEvaluator, EvalResult
+from repro.core.database import CandidateDB, embed_code
+from repro.core.archive import MapElitesArchive
+from repro.core.mutation import (HeuristicMutator, LLMMutator,
+                                 MutationContext, parse_directive)
+from repro.core.meta import MetaSummarizer
+from repro.core.fast_path import fast_path, VerifiedSeed, DEVICE_CONSERVATIVE
+from repro.core.slow_path import (SlowPathConfig, SearchResult, slow_path)
+
+__all__ = [
+    "Directive", "CONSERVATIVE", "DIMENSIONS", "EXPERT_SYSTEMS",
+    "violations", "is_valid", "random_directive", "enumerate_valid",
+    "V5E", "ChipSpec", "HardwareContext", "extract_hardware_context",
+    "RooflineReport", "parse_collectives", "roofline_from_compiled",
+    "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",
+    "CandidateDB", "embed_code", "MapElitesArchive", "HeuristicMutator",
+    "LLMMutator", "MutationContext", "parse_directive", "MetaSummarizer",
+    "fast_path", "VerifiedSeed", "DEVICE_CONSERVATIVE", "SlowPathConfig",
+    "SearchResult", "slow_path",
+]

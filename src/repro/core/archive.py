@@ -1,0 +1,34 @@
+"""MAP-Elites diversity archive (paper Appendix E, Mouret & Clune 2015).
+
+Grid indexed by the behavioral descriptor derived from the optimization
+directive (backend, placement, completion); each cell keeps the
+highest-scoring candidate with that behavioral profile. Archive samples are
+injected into mutation prompts as cross-pollination inspirations."""
+from __future__ import annotations
+
+import random
+
+
+class MapElitesArchive:
+    def __init__(self):
+        self.cells = {}
+
+    def offer(self, cand):
+        key = cand.directive.behavior
+        cur = self.cells.get(key)
+        if cand.result and cand.result.ok and (cur is None
+                                               or cand.score > cur.score):
+            self.cells[key] = cand
+            return True
+        return False
+
+    def sample(self, rng: random.Random, k=2, exclude_behavior=None):
+        pool = [c for b, c in self.cells.items() if b != exclude_behavior]
+        rng.shuffle(pool)
+        return pool[:k]
+
+    def elites(self):
+        return sorted(self.cells.values(), key=lambda c: -c.score)
+
+    def coverage(self):
+        return len(self.cells)

@@ -1,0 +1,114 @@
+"""Cascade evaluation (paper §3.3): every offspring passes a fast-fail
+three-level cascade — l1 build+compile, l2 numerical verification against the
+workload oracle, l3 benchmark. Score = 10000 / (1 + t_ms); candidates failing
+l1/l2 score 0 and carry a diagnostic for the feedback loop.
+
+l3 on this CPU-only container is the analytic v5e roofline composition of the
+workload at its full deployment shape (DESIGN.md §2); ``wallclock=True``
+additionally times the small-shape execution (used by ablation benchmarks).
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design_space import Directive
+
+
+@dataclass
+class EvalResult:
+    level: int                    # highest level passed (0..3)
+    score: float
+    t_model_ms: float = float("inf")
+    t_wall_ms: float = float("inf")
+    diagnostic: str = ""
+    hlo_ops: dict = field(default_factory=dict)
+
+    @property
+    def ok(self):
+        return self.level >= 3
+
+
+@dataclass
+class Candidate:
+    directive: Directive
+    gen: int = 0
+    island: int = 0
+    parent_id: int = -1
+    mutation: str = "seed"
+    cid: int = -1
+    result: EvalResult | None = None
+    code_text: str = ""           # jaxpr text of the built program
+
+    @property
+    def score(self):
+        return self.result.score if self.result else 0.0
+
+
+class CascadeEvaluator:
+    def __init__(self, workload, mesh, hw, *, rtol=2e-3, wallclock=False,
+                 verify_inputs=None):
+        self.workload = workload
+        self.mesh = mesh
+        self.hw = hw
+        self.rtol = rtol
+        self.wallclock = wallclock
+        key = jax.random.PRNGKey(1234)
+        self.inputs = verify_inputs or workload.example_inputs(key, mesh)
+        self.expected = workload.reference(*self.inputs)
+
+    def evaluate(self, cand: Candidate) -> EvalResult:
+        d = cand.directive
+        # ---- l1: directive validity + build + trace/compile -------------
+        viol = self.workload.check(d, self.hw)
+        if viol:
+            return EvalResult(0, 0.0, diagnostic="invalid directive: "
+                              + "; ".join(viol))
+        try:
+            fn = self.workload.build(d, self.mesh)
+            jfn = jax.jit(fn)
+            lowered = jfn.lower(*self.inputs)
+            cand.code_text = lowered.as_text()[:200_000]
+        except Exception:
+            return EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
+                              + traceback.format_exc()[-1500:])
+        # ---- l2: numerical verification ---------------------------------
+        try:
+            out = jfn(*self.inputs)
+            tol = self.rtol
+            if d.tunable("wire_i8", 0):
+                tol = max(tol, 8e-2)          # quantized wire is lossy by design
+            for got, exp in zip(jax.tree.leaves(out),
+                                jax.tree.leaves(self.expected)):
+                got = np.asarray(got, np.float32)
+                exp = np.asarray(exp, np.float32)
+                if not np.all(np.isfinite(got)):
+                    return EvalResult(1, 0.0, diagnostic=(
+                        "l2 verify failed: non-finite values (deadlock-free "
+                        "but corrupt transfer — check completion/ordering)"))
+                err = np.max(np.abs(got - exp)) / (np.max(np.abs(exp)) + 1e-9)
+                if err > tol:
+                    return EvalResult(1, 0.0, diagnostic=(
+                        f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
+                        f"(placement={d.placement}, completion={d.completion})"))
+        except Exception:
+            return EvalResult(1, 0.0, diagnostic="l2 execution failed:\n"
+                              + traceback.format_exc()[-1500:])
+        # ---- l3: benchmark ----------------------------------------------
+        t_model = self.workload.analytic_cost(d, self.hw)
+        t_ms = t_model * 1e3
+        t_wall = float("inf")
+        if self.wallclock:
+            jfn(*self.inputs)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax.block_until_ready(jfn(*self.inputs))
+            t_wall = (time.perf_counter() - t0) / 3 * 1e3
+        return EvalResult(3, 10000.0 / (1.0 + t_ms), t_model_ms=t_ms,
+                          t_wall_ms=t_wall,
+                          diagnostic=f"ok: modeled {t_ms:.3f} ms")

@@ -1,0 +1,145 @@
+"""Static analyzer: host-driven program -> communication dependency graph
+(paper §3.2 step 1, Appendix F).
+
+The paper's analyzer walks user CUDA/NCCL code; ours walks the *jaxpr* of the
+host-driven baseline. It finds every collective primitive (psum, all_to_all,
+ppermute, all_gather, psum_scatter …), its buffer operands (shape/dtype/
+bytes), producer and consumer equations, and the execution-order chain —
+exactly the data the fast path needs to pick transformation targets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+COLLECTIVE_PRIMS = {
+    "psum": "all-reduce",
+    "psum_scatter": "reduce-scatter",
+    "all_gather": "all-gather",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+}
+
+
+@dataclass
+class CommNode:
+    index: int                    # global eqn order
+    prim: str                     # jax primitive name
+    kind: str                     # HLO-style collective kind
+    axes: tuple                   # mesh axes the collective runs over
+    operands: list                # [(shape, dtype, bytes)]
+    producers: list = field(default_factory=list)   # producing prim names
+    consumers: list = field(default_factory=list)   # consuming prim names
+
+    @property
+    def payload_bytes(self):
+        return sum(b for _, _, b in self.operands)
+
+    def describe(self):
+        shapes = ", ".join(f"{d}[{','.join(map(str, s))}]"
+                           for s, d, _ in self.operands)
+        return (f"#{self.index:<4d} {self.kind:20s} axes={self.axes} "
+                f"({shapes})\n        produced by: {self.producers}"
+                f"\n        consumed by: {self.consumers}")
+
+
+@dataclass
+class CommGraph:
+    nodes: list
+    n_eqns: int
+    order: list                   # [(index, 'compute'|'communicate', prim)]
+
+    @property
+    def collective_bytes(self):
+        return sum(n.payload_bytes for n in self.nodes)
+
+    def phases(self):
+        """Collapse consecutive compute eqns: [('compute', n), ('comm', node)]."""
+        out = []
+        run = 0
+        comm_iter = iter(self.nodes)
+        for idx, kind, prim in self.order:
+            if kind == "compute":
+                run += 1
+            else:
+                if run:
+                    out.append(("compute", run))
+                    run = 0
+                out.append(("communicate", prim))
+        if run:
+            out.append(("compute", run))
+        return out
+
+    def describe(self):
+        lines = [f"Communication Graph ({len(self.nodes)} collectives, "
+                 f"{self.n_eqns} eqns)"]
+        for n in self.nodes:
+            lines.append("  " + n.describe())
+        lines.append("Execution Order (phases)")
+        for kind, x in self.phases():
+            lines.append(f"  {kind}: {x}")
+        return "\n".join(lines)
+
+
+def _nbytes(aval):
+    n = int(np.prod(aval.shape)) if aval.shape else 1
+    return n * aval.dtype.itemsize
+
+
+def _sub_jaxprs(eqn):
+    out = []
+    for val in eqn.params.values():
+        cands = val if isinstance(val, (tuple, list)) else (val,)
+        for x in cands:
+            if hasattr(x, "jaxpr"):          # ClosedJaxpr
+                out.append(x.jaxpr)
+            elif hasattr(x, "eqns"):         # Jaxpr
+                out.append(x)
+    return out
+
+
+def _walk(jaxpr, nodes, order, producer, counter):
+    """producer: var id -> (prim_name, CommNode | None)."""
+    for eqn in jaxpr.eqns:
+        idx = counter[0]
+        counter[0] += 1
+        prim = eqn.primitive.name
+        srcs = []
+        for v in eqn.invars:
+            got = producer.get(id(v))
+            if got is not None:
+                src_prim, src_node = got
+                srcs.append(src_prim)
+                if src_node is not None and prim not in src_node.consumers:
+                    src_node.consumers.append(prim)
+        node = None
+        if prim in COLLECTIVE_PRIMS:
+            axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+            if not isinstance(axes, (tuple, list)):
+                axes = (axes,)
+            operands = [(tuple(v.aval.shape), str(v.aval.dtype), _nbytes(v.aval))
+                        for v in eqn.invars if hasattr(v, "aval")
+                        and hasattr(v.aval, "shape")]
+            node = CommNode(index=idx, prim=prim, kind=COLLECTIVE_PRIMS[prim],
+                            axes=tuple(axes), operands=operands,
+                            producers=sorted(set(srcs)))
+            nodes.append(node)
+            order.append((idx, "communicate", prim))
+        else:
+            order.append((idx, "compute", prim))
+        for v in eqn.outvars:
+            producer[id(v)] = (prim, node)
+        for sub in _sub_jaxprs(eqn):
+            _walk(sub, nodes, order, producer, counter)
+
+
+def analyze(fn, *example_args) -> CommGraph:
+    """Build the communication dependency graph of ``fn``."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    nodes, order = [], []
+    _walk(closed.jaxpr, nodes, order, {}, [0])
+    return CommGraph(nodes=nodes, n_eqns=len(order), order=order)

@@ -1,0 +1,268 @@
+"""Roofline cost model over a compiled SPMD module (TPU v5e target).
+
+Three terms per chip:
+  compute    = HLO_FLOPs / peak_bf16_flops
+  memory     = HLO_bytes / hbm_bw
+  collective = sum(per-op wire bytes) / link_bw   (DCN-crossing ops charged
+               at dcn_bw; all-reduce counts 2(n-1)/n, gather/scatter/a2a
+               (n-1)/n, permute 1x)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (the per-device SPMD
+program). Collective payloads are parsed from the HLO text — XLA does not
+report them in cost_analysis.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.core.hardware import ChipSpec, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CONVERT_RE = re.compile(r"=\s*f32\[([\d,]+)\]\S*\s+convert\(")
+
+
+def conversion_overhead_bytes(hlo_text: str, min_bytes: int = 2**20) -> float:
+    """CPU-backend f32-promotion overhead: XLA:CPU converts bf16 weights to
+    f32 before dots (no native bf16 matmul), so cost_analysis charges an f32
+    write + f32 re-read that a TPU would never issue. Sum 2x the f32 size of
+    every large convert — subtracting this approximates TPU-native traffic.
+    """
+    total = 0.0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            total += 2.0 * b
+    return total
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str):
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    payload_bytes: int            # max(result, operands) payload per device
+    group_size: int
+    crosses_pod: bool
+    wire_bytes: float             # effective bytes on the wire per device
+
+    def describe(self):
+        where = "DCN" if self.crosses_pod else "ICI"
+        return (f"{self.kind:20s} {self.payload_bytes/2**20:9.2f} MiB "
+                f"group={self.group_size:4d} {where} "
+                f"wire={self.wire_bytes/2**20:9.2f} MiB")
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * f
+    if kind == "collective-permute" or kind == "collective-broadcast":
+        return 1.0
+    return f                       # all-gather, reduce-scatter, all-to-all
+
+
+def parse_collectives(hlo_text: str, chips_per_pod: int = 0):
+    """Extract collective ops + wire bytes from HLO text.
+
+    Counts ``op`` and ``op-start`` forms, skips ``-done``. ``chips_per_pod``
+    > 0 enables DCN detection (any replica group spanning a pod boundary).
+    """
+    ops = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m:
+            continue
+        rest = m.group(1)
+        found = None
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", rest):
+                found = op
+                break
+        if not found:
+            continue
+        # result types are before the op name; operands inside parens
+        head, _, tail = rest.partition(f"{found}")
+        result_bytes = _shape_bytes(head)
+        operand_bytes = _shape_bytes(tail.split(", replica_groups")[0]
+                                     .split(", channel_id")[0])
+        payload = max(result_bytes, operand_bytes)
+        gsize, crosses = _parse_groups(rest, chips_per_pod)
+        kind = found
+        wire = payload * _wire_factor(kind, gsize)
+        # The CPU backend promotes bf16 reductions to f32 ("*_promoted"
+        # to_apply regions); on TPU the wire dtype stays bf16 — correct 2x.
+        if "promoted" in rest:
+            wire *= 0.5
+        ops.append(CollectiveOp(
+            kind=kind, payload_bytes=payload, group_size=gsize,
+            crosses_pod=crosses, wire_bytes=wire))
+    return ops
+
+
+def _parse_groups(rest: str, chips_per_pod: int):
+    m = _IOTA_GROUPS_RE.search(rest)
+    if m:
+        n_groups, gsize = int(m.group(1)), int(m.group(2))
+        # iota order: consecutive ids in a group -> crosses pod iff the group
+        # stride spans the pod boundary; detect via transpose suffix
+        crosses = False
+        if chips_per_pod and gsize > 1:
+            tm = re.search(r"replica_groups=\[\d+,\d+\]<=\[([\d,]+)\]"
+                           r"(T\(([\d,]+)\))?", rest)
+            if tm:
+                dims = [int(x) for x in tm.group(1).split(",")]
+                total = 1
+                for d in dims:
+                    total *= d
+                # a group of consecutive iota ids stays within a pod iff
+                # gsize <= chips_per_pod and no transpose reorders across it
+                if tm.group(2):
+                    crosses = total > chips_per_pod
+                else:
+                    crosses = gsize > chips_per_pod
+        return gsize, crosses
+    m = _LIST_GROUPS_RE.search(rest)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        crosses = False
+        if chips_per_pod and ids:
+            crosses = (max(ids) // chips_per_pod) != (min(ids) // chips_per_pod)
+        return max(1, len(ids)), crosses
+    return 1, False
+
+
+@dataclass
+class RooflineReport:
+    flops: float
+    bytes_accessed: float
+    collectives: list
+    chip: ChipSpec = field(default_factory=lambda: V5E)
+    convert_overhead: float = 0.0     # CPU f32-promotion bytes (see above)
+
+    @property
+    def compute_s(self):
+        return self.flops / self.chip.peak_bf16_flops
+
+    @property
+    def memory_s(self):
+        return self.bytes_accessed / self.chip.hbm_bw
+
+    @property
+    def memory_corrected_s(self):
+        """Memory term minus the CPU-only f32-promotion traffic."""
+        return max(0.0, self.bytes_accessed - self.convert_overhead) \
+            / self.chip.hbm_bw
+
+    @property
+    def ici_wire_bytes(self):
+        return sum(c.wire_bytes for c in self.collectives if not c.crosses_pod)
+
+    @property
+    def dcn_wire_bytes(self):
+        return sum(c.wire_bytes for c in self.collectives if c.crosses_pod)
+
+    @property
+    def collective_s(self):
+        return (self.ici_wire_bytes / self.chip.ici_link_bw
+                + self.dcn_wire_bytes / self.chip.dcn_bw)
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self):
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_time_s(self):
+        """No-overlap upper bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def extrapolate(self, rep2, repeats: int):
+        """Linear depth extrapolation: self is the R=1 module, rep2 the R=2
+        module; returns the R=repeats estimate. Collectives are diffed as a
+        multiset — the per-layer body collectives appear (repeats-1) extra
+        times."""
+        from collections import Counter
+
+        def key(c):
+            return (c.kind, c.payload_bytes, c.group_size, c.crosses_pod,
+                    c.wire_bytes)
+
+        c1 = Counter(key(c) for c in self.collectives)
+        c2 = Counter(key(c) for c in rep2.collectives)
+        body = c2 - c1
+        colls = list(self.collectives)
+        for (kind, payload, gsize, crosses, wire), cnt in body.items():
+            for _ in range(cnt * (repeats - 1)):
+                colls.append(CollectiveOp(kind, payload, gsize, crosses, wire))
+        return RooflineReport(
+            flops=self.flops + (repeats - 1) * (rep2.flops - self.flops),
+            bytes_accessed=self.bytes_accessed
+            + (repeats - 1) * (rep2.bytes_accessed - self.bytes_accessed),
+            collectives=colls, chip=self.chip,
+            convert_overhead=self.convert_overhead + (repeats - 1)
+            * (rep2.convert_overhead - self.convert_overhead))
+
+    def summary(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "ici_wire_bytes": self.ici_wire_bytes,
+            "dcn_wire_bytes": self.dcn_wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_corrected_s": self.memory_corrected_s,
+            "convert_overhead_bytes": self.convert_overhead,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "n_collectives": len(self.collectives),
+        }
+
+
+def roofline_from_compiled(compiled, chips_per_pod=0, chip: ChipSpec = V5E,
+                           hlo_text=None):
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = parse_collectives(text, chips_per_pod)
+    return RooflineReport(flops=flops, bytes_accessed=byts, collectives=colls,
+                          chip=chip,
+                          convert_overhead=conversion_overhead_bytes(text))

@@ -1,0 +1,79 @@
+"""Candidate database with code embeddings, kNN retrieval and novelty
+filtering (paper Appendix E/J).
+
+The paper embeds candidate CUDA source with a neural code encoder; here the
+"code" is the lowered program (jaxpr/StableHLO text) and the embedding is a
+feature-hashed bag of op n-grams — deterministic, dependency-free, and good
+enough for structural similarity (psum-heavy vs permute-heavy vs DMA-heavy
+programs land far apart)."""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import numpy as np
+
+_TOKEN_RE = re.compile(r"[a-zA-Z][\w\-.]*")
+DIM = 128
+
+
+def embed_code(text: str, dim: int = DIM) -> np.ndarray:
+    toks = _TOKEN_RE.findall(text)[:20000]
+    v = np.zeros(dim, np.float32)
+    for i in range(len(toks) - 1):
+        g = toks[i] + " " + toks[i + 1]
+        h = int(hashlib.blake2s(g.encode(), digest_size=8).hexdigest(), 16)
+        v[h % dim] += 1.0 if (h >> 63) else -1.0
+    n = np.linalg.norm(v)
+    return v / n if n else v
+
+
+class CandidateDB:
+    def __init__(self, novelty_threshold: float = 0.995):
+        self.records = []              # Candidate list (cid == index)
+        self.embeddings = []
+        self.novelty_threshold = novelty_threshold
+
+    def add(self, cand):
+        cand.cid = len(self.records)
+        self.records.append(cand)
+        self.embeddings.append(embed_code(cand.code_text or
+                                          cand.directive.render()))
+        return cand.cid
+
+    def knn(self, cand, k=3):
+        """Structurally similar prior candidates + their feedback."""
+        if not self.records:
+            return []
+        q = embed_code(cand.code_text or cand.directive.render())
+        sims = np.array([float(q @ e) for e in self.embeddings])
+        order = np.argsort(-sims)
+        out = []
+        for i in order[:k + 1]:
+            r = self.records[i]
+            if r.cid == cand.cid:
+                continue
+            out.append((float(sims[i]), r))
+        return out[:k]
+
+    def is_novel(self, directive, code_text=""):
+        """Novelty filter: reject near-identical directives already seen."""
+        for r in self.records:
+            if r.directive == directive:
+                return False
+        if code_text:
+            q = embed_code(code_text)
+            for e, r in zip(self.embeddings, self.records):
+                if float(q @ e) > self.novelty_threshold \
+                        and r.directive.as_dict() == directive.as_dict():
+                    return False
+        return True
+
+    @property
+    def best(self):
+        done = [r for r in self.records if r.result and r.result.ok]
+        return max(done, key=lambda r: r.score) if done else None
+
+    def history(self):
+        return [(r.cid, r.gen, r.island, r.mutation, r.score,
+                 r.directive.behavior) for r in self.records]

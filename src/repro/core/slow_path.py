@@ -1,0 +1,159 @@
+"""Slow-path agent: multi-island evolutionary search, Algorithm 1 (paper
+§3.3, Appendix E/H) with explore->exploit phase scheduling, MAP-Elites
+cross-pollination, embedding-guided candidate DB with novelty filtering,
+periodic migration, and the meta-summarizer feedback loop."""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from dataclasses import dataclass, field
+
+from repro.core.archive import MapElitesArchive
+from repro.core.cascade import Candidate, CascadeEvaluator
+from repro.core.database import CandidateDB
+from repro.core.design_space import Directive, random_directive
+from repro.core.meta import MetaSummarizer
+from repro.core.mutation import HeuristicMutator, MutationContext
+
+
+@dataclass
+class SlowPathConfig:
+    islands: int = 3
+    generations: int = 12
+    explore_frac: float = 0.4        # paper §4.4: 40% explore then exploit
+    migration_every: int = 4
+    migration_k: int = 1
+    selection_pressure: float = 2.0
+    seed: int = 0
+    meta_every: int = 3
+
+
+@dataclass
+class Island:
+    idx: int
+    population: list = field(default_factory=list)
+
+    def select(self, rng, pressure):
+        """Fitness-weighted sampling (softmax over score with pressure)."""
+        alive = [c for c in self.population if c.result is not None]
+        if not alive:
+            return None
+        mx = max(c.score for c in alive)
+        ws = [math.exp(pressure * (c.score - mx) / max(1.0, mx or 1.0))
+              for c in alive]
+        return rng.choices(alive, weights=ws)[0]
+
+
+@dataclass
+class SearchResult:
+    best: Candidate
+    db: CandidateDB
+    archive: MapElitesArchive
+    meta: MetaSummarizer
+    seed_score: float
+    history: list
+
+    def best_per_generation(self):
+        out = {}
+        for r in self.db.records:
+            if r.result and r.result.ok:
+                out[r.gen] = max(out.get(r.gen, 0.0), r.score)
+        best = 0.0
+        series = []
+        for g in sorted(out):
+            best = max(best, out[g])
+            series.append((g, best))
+        return series
+
+
+def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
+              mutator=None, evaluator=None, verbose=False) -> SearchResult:
+    """seed: VerifiedSeed from the fast path (generation zero)."""
+    cfg = cfg or SlowPathConfig()
+    rng = random.Random(cfg.seed)
+    wl = seed.workload
+    ev = evaluator or CascadeEvaluator(wl, mesh, hw)
+    mut = mutator or HeuristicMutator()
+    db = CandidateDB()
+    archive = MapElitesArchive()
+    meta = MetaSummarizer(every=cfg.meta_every)
+    traits = wl.traits(hw)
+    tun_space = _tunable_space(wl)
+
+    # island initialization: distinct seeds = semantically different variants
+    # of the fast-path baseline drawn from C (paper Appendix E)
+    islands = []
+    for i in range(cfg.islands):
+        d = seed.directive if i == 0 else random_directive(rng, **traits)
+        d = dataclasses.replace(
+            d, tunables=seed.directive.tunables)
+        cand = Candidate(directive=d, gen=0, island=i,
+                         mutation="island-seed")
+        cand.result = ev.evaluate(cand)
+        db.add(cand)
+        archive.offer(cand)
+        meta.observe(cand)
+        islands.append(Island(idx=i, population=[cand]))
+    seed_score = islands[0].population[0].score
+
+    recommendations = []
+    for gen in range(1, cfg.generations + 1):
+        phase = "explore" if gen <= cfg.explore_frac * cfg.generations \
+            else "exploit"
+        for isl in islands:
+            parent = isl.select(rng, cfg.selection_pressure)
+            if parent is None:
+                continue
+            ctx = MutationContext(
+                parent=parent, phase=phase,
+                archive_samples=archive.sample(
+                    rng, 2, exclude_behavior=parent.directive.behavior),
+                neighbors=db.knn(parent, 3),
+                recommendations=recommendations,
+                hardware=hw, traits=traits, tunable_space=tun_space)
+            d, form = mut.propose(ctx, rng)
+            if not db.is_novel(d):                 # novelty filter: resample
+                d, form = mut.propose(ctx, rng)
+                if not db.is_novel(d):
+                    d = random_directive(rng, **traits)
+                    form = "novelty-resample"
+            child = Candidate(directive=d, gen=gen, island=isl.idx,
+                              parent_id=parent.cid, mutation=form)
+            child.result = ev.evaluate(child)      # cascade l1 -> l2 -> l3
+            db.add(child)
+            archive.offer(child)
+            meta.observe(child)
+            isl.population.append(child)
+            if len(isl.population) > 8:            # bounded population
+                isl.population.sort(key=lambda c: -c.score)
+                isl.population = isl.population[:8]
+            if verbose:
+                print(f"g{gen} i{isl.idx} {form:16s} "
+                      f"{d.backend[:5]}/{d.placement[:14]} "
+                      f"score={child.score:8.2f} [{phase}]")
+        # migration: top-k of each island copied into a random other island
+        if gen % cfg.migration_every == 0:
+            for isl in islands:
+                top = sorted(isl.population, key=lambda c: -c.score)
+                for t in top[:cfg.migration_k]:
+                    dst = rng.choice([j for j in islands if j.idx != isl.idx])
+                    dst.population.append(t)
+        if gen % cfg.meta_every == 0:
+            _, recommendations = meta.summarize(gen, db)
+
+    best = db.best
+    return SearchResult(best=best, db=db, archive=archive, meta=meta,
+                        seed_score=seed_score, history=db.history())
+
+
+def _tunable_space(wl):
+    defaults = wl.default_tunables()
+    space = {}
+    for name, v in defaults.items():
+        if name in ("wire_i8", "tight"):
+            space[name] = (0, 1)
+        elif isinstance(v, int) and v > 1:
+            space[name] = tuple(sorted({max(1, v // 4), max(1, v // 2), v,
+                                        v * 2, v * 4}))
+    return space

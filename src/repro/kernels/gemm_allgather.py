@@ -1,0 +1,126 @@
+"""Fused GEMM + device-initiated AllGather (paper workload 4).
+
+Each device computes C_local = A_local @ B and broadcasts it to every peer by
+remote DMA into the peer's output slab (the LSA-analogue: direct stores into
+peer memory — here single-hop ICI remote copies).
+
+Placement realizations (design-space P):
+  TILE_FUSED — the broadcast of tile t starts as soon as tile t's GEMM
+    finishes, while tile t+1 computes (per-tile granularity G=PER_TILE).
+  DEFERRED   — one transfer per peer after the full local GEMM
+    (G=PER_PEER; the fast-path conservative shape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
+               *, axis, n_dev, M_l, tm, fused):
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+    me = jax.lax.axis_index(axis)
+
+    ctile[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(ctile.dtype)
+    row0 = me * M_l + t * tm
+    pltpu.sync_copy(ctile, o_ref.at[pl.ds(row0, tm)])
+
+    def bcast(src_rows, nrows):
+        for off in range(1, n_dev):
+            peer = jax.lax.rem(me + off, n_dev)
+            pltpu.make_async_remote_copy(
+                src_ref=o_ref.at[pl.ds(src_rows, nrows)],
+                dst_ref=o_ref.at[pl.ds(src_rows, nrows)],
+                send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                device_id_type=pltpu.DeviceIdType.MESH).start()
+
+    if fused:
+        bcast(row0, tm)                      # per-tile, overlaps next tile
+    else:
+        @pl.when(t == nt - 1)
+        def _send_all():
+            bcast(me * M_l, M_l)             # one slab per peer, deferred
+
+    @pl.when(t == nt - 1)
+    def _drain():
+        # wait for all outgoing sends and all peers' incoming tiles
+        for off in range(1, n_dev):
+            peer = jax.lax.rem(me + off, n_dev)
+            src_peer = jax.lax.rem(me - off + n_dev, n_dev)
+            if fused:
+                for tt in range(nt):
+                    out_rows = me * M_l + tt * tm
+                    in_rows = src_peer * M_l + tt * tm
+                    pltpu.make_async_remote_copy(
+                        src_ref=o_ref.at[pl.ds(out_rows, tm)],
+                        dst_ref=o_ref.at[pl.ds(out_rows, tm)],
+                        send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                        device_id_type=pltpu.DeviceIdType.MESH).wait_send()
+                    pltpu.make_async_remote_copy(
+                        src_ref=o_ref.at[pl.ds(in_rows, tm)],
+                        dst_ref=o_ref.at[pl.ds(in_rows, tm)],
+                        send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                        device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
+            else:
+                pltpu.make_async_remote_copy(
+                    src_ref=o_ref.at[pl.ds(me * M_l, M_l)],
+                    dst_ref=o_ref.at[pl.ds(me * M_l, M_l)],
+                    send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                    device_id_type=pltpu.DeviceIdType.MESH).wait_send()
+                pltpu.make_async_remote_copy(
+                    src_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
+                    dst_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
+                    send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                    device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
+
+
+def gemm_allgather_sharded(a, b, *, axis, n_dev, tile_m=128, fused=True,
+                           interpret=None):
+    """Per-device fn (under shard_map). a: (M_l, K) local; b: (K, N) replicated.
+    Returns (n_dev*M_l, N) — the full gathered GEMM output on every device."""
+    M_l, K = a.shape
+    N = b.shape[1]
+    tm = min(tile_m, M_l)
+    assert M_l % tm == 0
+    kern = functools.partial(_ga_kernel, axis=axis, n_dev=n_dev, M_l=M_l,
+                             tm=tm, fused=fused)
+    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    return pl.pallas_call(
+        kern,
+        grid=(M_l // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, K), lambda t: (t, 0)),
+            pl.BlockSpec((K, N), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_dev * M_l, N), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tm, N), a.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=ip,
+        compiler_params=pltpu.CompilerParams(collective_id=11),
+    )(a, b)
+
+
+def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True):
+    """Global entry: a_shards (n, M_l, K) sharded over axis; b replicated."""
+    from jax.sharding import PartitionSpec as P
+    n_dev = mesh.shape[axis]
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(axis), P(None, None)),
+                       out_specs=P(axis), check_vma=False)
+    def run(a, bb):
+        out = gemm_allgather_sharded(a[0], bb, axis=axis, n_dev=n_dev,
+                                     tile_m=tile_m, fused=fused)
+        return out[None]
+
+    return run(a_shards, b)

@@ -1,0 +1,109 @@
+"""KV-cache shuttle: chained GPU-triggered sends for disaggregated
+prefill->decode serving (paper workload 3, Table 4 row 3).
+
+The prefill rank computes K = x@Wk, starts its send, computes V = x@Wv while
+K is on the wire, then sends V (signal-chained). The decode rank waits
+entirely on-device. The CUCo-discovered strategy is exactly this chain
+("K GEMM -> send K -> V GEMM -> send V with signal"); the host-driven
+baseline computes both projections, then transfers both (idle network during
+compute, idle compute during transfer).
+
+``chained=False`` reproduces the sequential shape inside the kernel:
+each send is awaited before the next GEMM starts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
+                    kbuf, vbuf, ksem, krecv, vsem, vrecv,
+                    *, axis, chained, decode_rank):
+    me = jax.lax.axis_index(axis)
+
+    def kdma():
+        return pltpu.make_async_remote_copy(
+            src_ref=kbuf, dst_ref=ko_ref, send_sem=ksem, recv_sem=krecv,
+            device_id=(decode_rank,), device_id_type=pltpu.DeviceIdType.MESH)
+
+    def vdma():
+        return pltpu.make_async_remote_copy(
+            src_ref=vbuf, dst_ref=vo_ref, send_sem=vsem, recv_sem=vrecv,
+            device_id=(decode_rank,), device_id_type=pltpu.DeviceIdType.MESH)
+
+    @pl.when(me != decode_rank)
+    def _prefill():
+        kbuf[...] = jax.lax.dot_general(
+            x_ref[...], wk_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(kbuf.dtype)
+        kd = kdma()
+        kd.start()                       # K on the wire ...
+        if not chained:
+            kd.wait_send()               # sequential: drain before V GEMM
+        vbuf[...] = jax.lax.dot_general(
+            x_ref[...], wv_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(vbuf.dtype)
+        vd = vdma()
+        vd.start()
+        if chained:
+            kd.wait_send()
+        vd.wait_send()
+
+    @pl.when(me == decode_rank)
+    def _decode():
+        kdma().wait_recv()
+        vdma().wait_recv()
+
+
+def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
+                       interpret=None):
+    """Per-device fn (under shard_map over a 2-rank axis).
+    x: (T, d); wk/wv: (d, dk). Returns (K, V) — valid on the decode rank."""
+    T, d = x.shape
+    dk = wk.shape[1]
+    kern = functools.partial(_shuttle_kernel, axis=axis, chained=chained,
+                             decode_rank=decode_rank)
+    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    return pl.pallas_call(
+        kern,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda: (0, 0)),
+            pl.BlockSpec((d, dk), lambda: (0, 0)),
+            pl.BlockSpec((d, dk), lambda: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((T, dk), x.dtype)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((T, dk), x.dtype),
+            pltpu.VMEM((T, dk), x.dtype),
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+        ],
+        interpret=ip,
+        compiler_params=pltpu.CompilerParams(collective_id=13),
+    )(x, wk, wv)
+
+
+def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True):
+    """Global entry. x: (2, T, d) sharded over the 2-rank axis (prefill rank
+    holds real activations); wk/wv replicated. Returns K/V gathered per rank
+    — row [1] (decode rank) holds the shuttled projections."""
+    from jax.sharding import PartitionSpec as P
+
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(None, None), P(None, None)),
+                       out_specs=(P(axis), P(axis)), check_vma=False)
+    def run(xs, k, v):
+        ko, vo = kv_shuttle_sharded(xs[0], k, v, axis=axis, chained=chained)
+        # the prefill rank never writes its own output buffers: zero them
+        me = jax.lax.axis_index(axis)
+        ko = jnp.where(me == 1, ko, 0.0)
+        vo = jnp.where(me == 1, vo, 0.0)
+        return ko[None], vo[None]
+
+    return run(x, wk, wv)

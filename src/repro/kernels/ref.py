@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q/k/v: (BH, S, hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Skv = s.shape[-2:]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ring_attention_ref(q, k, v, *, causal=True):
+    """Global oracle for ring attention: q/k/v (n_dev, BH, S_l, hd) stacked
+    per device -> same layout output. Equivalent to full attention over the
+    concatenated sequence."""
+    n, BH, Sl, hd = q.shape
+    qf = q.transpose(1, 0, 2, 3).reshape(BH, n * Sl, hd)
+    kf = k.transpose(1, 0, 2, 3).reshape(BH, n * Sl, hd)
+    vf = v.transpose(1, 0, 2, 3).reshape(BH, n * Sl, hd)
+    o = flash_attention_ref(qf, kf, vf, causal=causal)
+    return o.reshape(BH, n, Sl, hd).transpose(1, 0, 2, 3)
+
+
+def gemm_allgather_ref(a_shards, b):
+    """a_shards: (n_dev, M_l, K); b: (K, N) -> (n_dev, n_dev*M_l, N):
+    every device ends with the full concatenated GEMM output."""
+    c = jnp.einsum("nmk,kn2->nmn2".replace("n2", "p"), a_shards, b)
+    full = c.reshape(-1, b.shape[1])
+    n = a_shards.shape[0]
+    return jnp.broadcast_to(full[None], (n,) + full.shape)
+
+
+def kv_shuttle_ref(x, wk, wv):
+    """Prefill rank computes K = x@wk, V = x@wv; decode rank receives both."""
+    return x @ wk, x @ wv

@@ -1,0 +1,198 @@
+"""Fused ring flash-attention with device-initiated KV rotation
+(the paper's Flash Attention + Context Parallelism workload, §4.2/App. N,
+adapted to TPU Pallas remote DMA).
+
+Each device owns one Q shard; KV shards rotate around the ring INSIDE the
+kernel via ``pltpu.make_async_remote_copy`` (the GIN-put analogue) with DMA
+semaphores (signal completion). The grid is (rounds, BH): rounds are
+sequential on TPU, so the double-buffered VMEM KV slots and the f32
+accumulators persist across rounds.
+
+Placement realizations (design-space P):
+  TILE_PIPELINED — the send of the *current* KV block to the neighbour is
+    started at the top of round r (both source slot read-only for compute),
+    and the recv wait happens only at the start of round r+1: transfer fully
+    overlaps this round's attention compute.
+  DEFERRED      — the send is issued after the round's compute finishes and
+    is waited on immediately (sequential comm/compute — the fast-path
+    conservative shape, matching host-driven behaviour inside one kernel).
+
+Ordering realizations (O): ACQREL waits eagerly right after issuing (fully
+fenced), ACQUIRE/RELEASE/RELAXED defer the recv wait to the consuming round.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
+                 kbuf, vbuf, acc, m_i, l_i,
+                 ksend, krecv, vsend, vrecv, credit,
+                 *, axis, causal, scale, pipelined, eager_wait, n_dev):
+    r = pl.program_id(0)
+    bh = pl.program_id(1)
+    n_bh = pl.num_programs(1)
+    me = jax.lax.axis_index(axis)
+    nxt = jax.lax.rem(me + 1, n_dev)
+    prv = jax.lax.rem(me - 1 + n_dev, n_dev)
+    cur = jax.lax.rem(r, 2)
+    sl = q_ref.shape[1]
+
+    @pl.when((r == 0) & (bh == 0))
+    def _load_local():
+        # round 0 uses the local KV shard: copy HBM -> VMEM slot 0
+        pltpu.sync_copy(k_ref, kbuf.at[0])
+        pltpu.sync_copy(v_ref, vbuf.at[0])
+
+    def _descs(slot_src, slot_dst):
+        kd = pltpu.make_async_remote_copy(
+            src_ref=kbuf.at[slot_src], dst_ref=kbuf.at[slot_dst],
+            send_sem=ksend, recv_sem=krecv, device_id=(nxt,),
+            device_id_type=pltpu.DeviceIdType.MESH)
+        vd = pltpu.make_async_remote_copy(
+            src_ref=vbuf.at[slot_src], dst_ref=vbuf.at[slot_dst],
+            send_sem=vsend, recv_sem=vrecv, device_id=(nxt,),
+            device_id_type=pltpu.DeviceIdType.MESH)
+        return kd, vd
+
+    def _send(slot_src, slot_dst):
+        kd, vd = _descs(slot_src, slot_dst)
+        kd.start()
+        vd.start()
+
+    def _wait(slot_src, slot_dst):
+        kd, vd = _descs(slot_src, slot_dst)   # same sems/shapes: legal waiter
+        kd.wait()
+        vd.wait()
+
+    if pipelined:
+        # TILE_PIPELINED: start rotating the current slot while computing on
+        # it (both reads); recv for r+1 was awaited at the top of this round.
+        # Backpressure: round r's send writes the neighbour slot its round
+        # r-1 compute read — wait for the neighbour's free-slot credit first.
+        @pl.when((bh == 0) & (r < n_dev - 1))
+        def _rotate():
+            @pl.when(r >= 1)
+            def _backpressure():
+                pltpu.semaphore_wait(credit, 1)
+            _send(cur, jax.lax.rem(r + 1, 2))
+            if eager_wait:
+                _wait(cur, jax.lax.rem(r + 1, 2))
+
+    # ---- compute this round's attention tile (flash accumulate) ----
+    @pl.when(r == 0)
+    def _init():
+        acc[bh] = jnp.zeros_like(acc[bh])
+        m_i[bh] = jnp.full_like(m_i[bh], NEG_INF)
+        l_i[bh] = jnp.zeros_like(l_i[bh])
+
+    src_dev = jax.lax.rem(me - r + n_dev, n_dev)     # whose KV we hold now
+    q = q_ref[bh].astype(jnp.float32)                # (Sl, hd)
+    k = kbuf[cur, bh].astype(jnp.float32)
+    v = vbuf[cur, bh].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = me * sl + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = src_dev * sl + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    m_prev = m_i[bh]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_i[bh] = l_i[bh] * alpha + jnp.sum(p, axis=1)
+    acc[bh] = acc[bh] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_i[bh] = m_new
+
+    if pipelined:
+        if not eager_wait:
+            # lazy ordering: block round r+1 until the rotated KV landed
+            @pl.when((bh == n_bh - 1) & (r < n_dev - 1))
+            def _fence():
+                _wait(cur, jax.lax.rem(r + 1, 2))
+    else:
+        # DEFERRED: rotate only after the whole round's compute is done
+        @pl.when((bh == n_bh - 1) & (r < n_dev - 1))
+        def _rotate_seq():
+            @pl.when(r >= 1)
+            def _backpressure():
+                pltpu.semaphore_wait(credit, 1)
+            _send(cur, jax.lax.rem(r + 1, 2))
+            _wait(cur, jax.lax.rem(r + 1, 2))
+
+    # Compute on slot r%2 is done AND our outgoing DMA reading it has been
+    # waited (the fence above ran): tell the upstream device its next-next
+    # send may now reuse this slot. Must come after the waits — an ACK before
+    # wait_send would let upstream overwrite a slot our DMA is still reading.
+    @pl.when((bh == n_bh - 1) & (r <= n_dev - 3))
+    def _ack_upstream():
+        pltpu.semaphore_signal(credit, 1, device_id=(prv,),
+                               device_id_type=pltpu.DeviceIdType.MESH)
+
+    @pl.when(r == n_dev - 1)
+    def _finish():
+        o_ref[bh] = (acc[bh] / jnp.maximum(l_i[bh], 1e-30)[:, None]
+                     ).astype(o_ref.dtype)
+
+
+def ring_attention_sharded(q, k, v, *, axis, n_dev, causal=True,
+                           pipelined=True, eager_wait=False, interpret=None):
+    """Per-device fn (call under shard_map). q/k/v: (BH, Sl, hd) local."""
+    BH, Sl, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    kern = functools.partial(_ring_kernel, axis=axis, causal=causal,
+                             scale=scale, pipelined=pipelined,
+                             eager_wait=eager_wait, n_dev=n_dev)
+    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    return pl.pallas_call(
+        kern,
+        grid=(n_dev, BH),
+        in_specs=[
+            pl.BlockSpec((BH, Sl, hd), lambda r, bh: (0, 0, 0)),  # q in VMEM
+            pl.BlockSpec(memory_space=pl.ANY),                 # k (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),                 # v (HBM)
+        ],
+        out_specs=pl.BlockSpec((BH, Sl, hd), lambda r, bh: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sl, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, BH, Sl, hd), q.dtype),    # K double buffer
+            pltpu.VMEM((2, BH, Sl, hd), q.dtype),    # V double buffer
+            pltpu.VMEM((BH, Sl, hd), jnp.float32),   # acc
+            pltpu.VMEM((BH, Sl), jnp.float32),       # m
+            pltpu.VMEM((BH, Sl), jnp.float32),       # l
+            pltpu.SemaphoreType.DMA,                 # k send
+            pltpu.SemaphoreType.DMA,                 # k recv
+            pltpu.SemaphoreType.DMA,                 # v send
+            pltpu.SemaphoreType.DMA,                 # v recv
+            pltpu.SemaphoreType.REGULAR,             # free-slot credit
+        ],
+        interpret=ip,
+        compiler_params=pltpu.CompilerParams(collective_id=7),
+    )(q, k, v)
+
+
+def ring_attention(q, k, v, mesh, *, axis="x", causal=True, pipelined=True,
+                   eager_wait=False):
+    """Global entry: q/k/v (n_dev, BH, Sl, hd) sharded on dim 0 over `axis`."""
+    from jax.sharding import PartitionSpec as P
+    n_dev = mesh.shape[axis]
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+                       out_specs=P(axis), check_vma=False)
+    def run(qs, ks, vs):
+        out = ring_attention_sharded(qs[0], ks[0], vs[0], axis=axis,
+                                     n_dev=n_dev, causal=causal,
+                                     pipelined=pipelined,
+                                     eager_wait=eager_wait)
+        return out[None]
+
+    return run(q, k, v)

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. The single-pod mesh is 16x16 = 256 chips (v5e pod); the
+multi-pod mesh adds a leading 'pod' axis over DCN (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, found {len(devs)} — run via "
+            f"repro.launch.dryrun (sets xla_force_host_platform_device_count)")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devs[:n])
+
+
+def make_mesh(shape, axes):
+    """Generic helper for tests/examples (small meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

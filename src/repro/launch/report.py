@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def load_cells():
+    cells, skips = [], []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if "skipped" in d:
+            skips.append(d)
+        else:
+            cells.append(d)
+    return cells, skips
+
+
+def fraction(d):
+    """Roofline fraction: compute term / modeled step time (max of terms)."""
+    r = d["roofline"]
+    return r["compute_s"] / max(r["step_time_s"], 1e-12)
+
+
+def roofline_table(mesh="16x16"):
+    cells, skips = load_cells()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "roofline frac | useful FLOPs | peak GiB (scan/analytic) | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in sorted(cells, key=lambda d: (d["arch"], d["shape"])):
+        if d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {fraction(d) * 100:.1f}% | "
+            f"{d['useful_flops_ratio']:.2f} | "
+            f"{m['peak_bytes'] / 2**30:.1f} / "
+            f"{m['analytic_peak_bytes'] / 2**30:.1f} | "
+            f"{'Y' if m['fits_hbm_analytic'] else 'N'} |")
+    for d in sorted(skips, key=lambda d: d["arch"]):
+        lines.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — "
+                     f"| — | skip: {d['skipped'][:40]}… |")
+    return "\n".join(lines)
+
+
+def dryrun_table():
+    cells, _ = load_cells()
+    lines = [
+        "| arch | shape | mesh | FLOPs/dev | bytes/dev | ICI wire | DCN wire "
+        "| #coll | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in sorted(cells, key=lambda d: (d["arch"], d["shape"], d["mesh"])):
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{r['flops']:.2e} | {r['bytes']:.2e} | "
+            f"{r['ici_wire_bytes'] / 2**30:.2f} GiB | "
+            f"{r['dcn_wire_bytes'] / 2**30:.2f} GiB | "
+            f"{r['n_collectives']} | {d['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table(sys.argv[2] if len(sys.argv) > 2 else "16x16"))
+    else:
+        print(dryrun_table())

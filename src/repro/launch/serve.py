@@ -1,0 +1,63 @@
+"""Production serving driver: batched generation with KV cache; optional
+disaggregated prefill/decode handoff.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        [--batch 8] [--prompt-len 64] [--new-tokens 64] [--disaggregated]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--disaggregated", action="store_true")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch)) if args.smoke else get_arch(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(
+        max_seq=args.prompt_len + args.new_tokens + 1,
+        temperature=args.temperature))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size,
+                                    (args.batch, args.prompt_len))
+             .astype(np.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = np.zeros((args.batch, cfg.enc_seq, cfg.d_model),
+                                   np.float32)
+    if cfg.num_patch_tokens:
+        batch["patches"] = np.zeros(
+            (args.batch, cfg.num_patch_tokens, cfg.d_model), np.float32)
+
+    t0 = time.perf_counter()
+    if args.disaggregated:
+        handoff = eng.prefill_remote(batch)      # prefill tier
+        toks = eng.decode_from_handoff(handoff, args.new_tokens)
+    else:
+        toks = eng.generate(batch, args.new_tokens)
+    dt = time.perf_counter() - t0
+    total = args.batch * args.new_tokens
+    print(f"[serve] {cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. compile); "
+          f"mode={'disaggregated' if args.disaggregated else 'monolithic'}")
+    print("[serve] sample:", np.asarray(toks[0][:16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs()`` returns weak-type-correct, shardable stand-ins — no device
+allocation — for the step function of each cell kind:
+
+  train_4k    -> train_step(params, opt_state, batch)
+  prefill_32k -> prefill_step(params, batch)
+  decode_32k / long_500k -> serve_step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Rules, sanitize_specs
+from repro.models import (StepOptions, cache_specs, decode_step, init_params,
+                          param_specs, prefill_step, train_loss)
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def rules_for(mesh, shape):
+    kind = "decode" if shape.kind == "decode" else shape.kind
+    return Rules(mesh, kind, long_context=(shape.seq_len > 100_000))
+
+
+def batch_sds(cfg, shape, with_labels):
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((B, S), jnp.int32)}
+    if with_labels:
+        out["labels"] = SDS((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_patch_tokens:
+        out["patches"] = SDS((B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_shardings(cfg, shape, rules):
+    b = rules.axes("batch")
+    dp = rules.dp_size()
+    if not (dp and shape.global_batch % dp == 0 and shape.global_batch >= dp):
+        b = None
+    out = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        out["labels"] = P(b, None)
+    if cfg.is_encoder_decoder:
+        out["frames"] = P(b, None, None)
+    if cfg.num_patch_tokens:
+        out["patches"] = P(b, None, None)
+    return out
+
+
+def make_train_step(cfg, rules, opts: StepOptions, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(p, batch, cfg, rules, opts))(params)
+        new_params, new_state, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg, rules, opts: StepOptions, seq_len):
+    def prefill(params, batch):
+        return prefill_step(params, batch, cfg, rules, seq_len=seq_len, opts=opts)
+    return prefill
+
+
+def make_serve_step(cfg, rules, opts: StepOptions):
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg, rules, opts=opts)
+    return serve_step
+
+
+def input_specs(cfg, shape, mesh, opts: StepOptions | None = None,
+                opt_cfg: AdamWConfig | None = None):
+    """Returns (step_fn, in_sds tuple, in_shardings tuple, donate_argnums)."""
+    opts = opts or StepOptions()
+    opt_cfg = opt_cfg or AdamWConfig()
+    rules = rules_for(mesh, shape)
+    key = jax.random.PRNGKey(0)
+    p_sds = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    p_specs = sanitize_specs(param_specs(cfg, rules), p_sds, mesh) \
+        if mesh is not None else jax.tree.map(lambda _: P(), p_sds)
+    b_sds = batch_sds(cfg, shape, with_labels=(shape.kind == "train"))
+    b_specs = batch_shardings(cfg, shape, rules)
+
+    if shape.kind == "train":
+        o_sds = jax.eval_shape(init_opt_state, p_sds)
+        o_specs = opt_state_specs(p_specs, p_sds, rules) if mesh is not None \
+            else jax.tree.map(lambda _: P(), o_sds)
+        fn = make_train_step(cfg, rules, opts, opt_cfg)
+        return fn, (p_sds, o_sds, b_sds), (p_specs, o_specs, b_specs), (0, 1)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, rules, opts, shape.seq_len)
+        return fn, (p_sds, b_sds), (p_specs, b_specs), ()
+
+    # decode: one new token against a seq_len-deep cache
+    c_sds, c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len, rules)
+    if mesh is not None:
+        c_specs = sanitize_specs(c_specs, c_sds, mesh)
+    else:
+        c_specs = jax.tree.map(lambda _: P(), c_sds)
+    b = rules.axes("batch")
+    dp = rules.dp_size()
+    if not (dp and shape.global_batch % dp == 0 and shape.global_batch >= dp):
+        b = None
+    tok_sds = SDS((shape.global_batch, 1), jnp.int32)
+    pos_sds = SDS((), jnp.int32)
+    fn = make_serve_step(cfg, rules, opts)
+    return fn, (p_sds, c_sds, tok_sds, pos_sds), \
+        (p_specs, c_specs, P(b, None), P()), (1,)

@@ -1,0 +1,8 @@
+from repro.models.model import (StepOptions, init_params, param_specs,
+                                train_loss, prefill_step, decode_step,
+                                init_cache, cache_specs, forward)
+
+__all__ = [
+    "StepOptions", "init_params", "param_specs", "train_loss",
+    "prefill_step", "decode_step", "init_cache", "cache_specs", "forward",
+]

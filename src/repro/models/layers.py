@@ -1,0 +1,208 @@
+"""Core NN layers shared by all architectures.
+
+Attention supports four kinds (full ``attn``, ``local_attn`` with a sliding
+window, ``chunked_attn`` with block-diagonal chunks, and NoPE ``global_attn``)
+over a single masked-softmax core with two execution paths:
+
+* dense einsum (short sequences),
+* memory-efficient lax.scan over KV blocks with a running-max/denominator
+  (pure-JAX flash attention) for long sequences — required so prefill_32k fits.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), F32) * scale).astype(dtype)
+
+
+def norm_init(d, norm_kind, dtype):
+    if norm_kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+# --------------------------------------------------------------------- norms
+
+def apply_norm(params, x, norm_kind, eps=1e-6):
+    xf = x.astype(F32)
+    if norm_kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["w"].astype(F32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["w"].astype(F32) + params["b"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs                # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def attn_mask(qpos, kpos, kind, window=0, chunk=0, causal=True):
+    """Boolean mask (Sq, Skv): True = attend."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    m = (q >= k) if causal else jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if kind == "local_attn":
+        m = m & (q - k < window)
+    elif kind == "chunked_attn":
+        m = m & (q // chunk == k // chunk)
+    return m
+
+
+def _dense_attention(q, k, v, qpos, kpos, kind, window, chunk, causal, scale):
+    """Grouped GQA attention: q (B,Sq,Hkv,G,hd), k/v (B,Skv,Hkv,hd) — the KV
+    heads are never materialized repeated (a 48x cache-traffic saving for
+    MQA decode; see EXPERIMENTS.md §Perf iteration 1)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(F32) * scale
+    m = attn_mask(qpos, kpos, kind, window, chunk, causal)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _flash_attention(q, k, v, qpos, kpos, kind, window, chunk, causal, scale,
+                     kv_block=1024, q_block=1024):
+    """Memory-efficient grouped attention: scan over Q blocks x KV blocks
+    with a running softmax. q: (B,Sq,Hkv,G,hd); k/v: (B,Skv,Hkv,hd).
+    Memory is O(q_block * kv_block) per step."""
+    B, Sq, Hkv, G, hd = q.shape
+    if Sq > q_block and Sq % q_block == 0:
+        nq = Sq // q_block
+        qs = q.reshape(B, nq, q_block, Hkv, G, hd).swapaxes(0, 1)
+        qp = qpos.reshape(nq, q_block)
+
+        def qstep(_, blk):
+            qb, qpb = blk
+            o = _flash_attention(qb, k, v, qpb, kpos, kind, window, chunk,
+                                 causal, scale, kv_block, q_block)
+            return None, o
+
+        _, outs = jax.lax.scan(qstep, None, (qs, qp))
+        return outs.swapaxes(0, 1).reshape(B, Sq, Hkv, G, hd)
+    Skv = k.shape[1]
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-10**9)  # masked out
+    k = k.reshape(B, nb, kv_block, Hkv, hd)
+    v = v.reshape(B, nb, kv_block, Hkv, hd)
+    kpos = kpos.reshape(nb, kv_block)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, kpb = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kb).astype(F32) * scale
+        mask = attn_mask(qpos, kpb, kind, window, chunk, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb).astype(F32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, F32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), F32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), F32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (k.swapaxes(0, 1), v.swapaxes(0, 1), kpos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,Hkv,G,hd)
+
+
+def attention(q, k, v, qpos, kpos, kind="attn", window=0, chunk=0, causal=True,
+              flash_threshold=8192, kv_block=1024):
+    """GQA attention. q: (B,Sq,Hq,hd), k/v: (B,Skv,Hkv,hd). The query heads
+    are grouped as (Hkv, G) so KV is never repeated in memory."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    if k.shape[1] > flash_threshold and Sq > 1:
+        out = _flash_attention(qg, k, v, qpos, kpos, kind, window, chunk,
+                               causal, scale, kv_block)
+    else:
+        out = _dense_attention(qg, k, v, qpos, kpos, kind, window, chunk,
+                               causal, scale)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ----------------------------------------------------------------------- MLP
+
+def mlp_init(key, d, d_ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"gate": dense_init(k1, d, d_ff, dtype),
+                "up": dense_init(k2, d, d_ff, dtype),
+                "down": dense_init(k3, d_ff, d, dtype)}
+    return {"up": dense_init(k1, d, d_ff, dtype),
+            "down": dense_init(k2, d_ff, d, dtype)}
+
+
+def mlp_apply(params, x, act):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    else:
+        h = jax.nn.gelu(x @ params["up"])
+    return h @ params["down"]
+
+
+# ------------------------------------------------------------ attention blok
+
+def attn_init(key, cfg, dtype, cross=False):
+    """Weights stored flattened (d, H*hd) so the sharded dim divides the mesh."""
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d, hq * hd, dtype),
+        "k": dense_init(ks[1], d, hkv * hd, dtype),
+        "v": dense_init(ks[2], d, hkv * hd, dtype),
+        "o": dense_init(ks[3], hq * hd, d, dtype, scale=1.0 / math.sqrt(hq * hd)),
+    }
+
+
+def qkv(params, x, cfg, positions, use_rope, rules=None):
+    """Project to (B,S,H,hd) q/k/v, applying RoPE if requested."""
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ params["q"]).reshape(B, S, hq, hd)
+    k = (x @ params["k"]).reshape(B, S, hkv, hd)
+    v = (x @ params["v"]).reshape(B, S, hkv, hd)
+    if rules is not None:
+        q = rules.shard(q, "batch", None, "heads", None)
+        k = rules.shard(k, "batch", None, "kv_heads", None)
+        v = rules.shard(v, "batch", None, "kv_heads", None)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (Griffin recurrent block):
+  x -> norm -> [branch A: linear -> causal conv1d(w=4) -> RG-LRU]
+            -> [branch B: linear -> gelu]
+  y = out_proj(A * B) + x
+
+RG-LRU: r_t = sigma(W_r u_t), i_t = sigma(W_i u_t),
+        log a_t = -c * softplus(L) * r_t        (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+Training/prefill use an associative scan (elementwise linear recurrence);
+decode is one step. Decode state: (h, conv tail of width-1 inputs).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, apply_norm
+
+F32 = jnp.float32
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^(1/c) ~ U[0.9, 0.999] (griffin appendix)
+    u = jax.random.uniform(ks[0], (d,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))                      # softplus^-1(-log u)
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "in_a": dense_init(ks[1], d, d, dtype),
+        "in_b": dense_init(ks[2], d, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, d), F32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "wr": dense_init(ks[4], d, d, dtype),
+        "wi": dense_init(ks[5], d, d, dtype),
+        "lam": lam,
+        "out": dense_init(ks[6], d, d, dtype),
+    }
+
+
+def rglru_state_shape(cfg, B):
+    d = cfg.d_model
+    return {"h": (B, d), "conv": (B, cfg.conv_width - 1, d)}
+
+
+def rglru_init_state(cfg, B, dtype=F32):
+    sh = rglru_state_shape(cfg, B)
+    return {"h": jnp.zeros(sh["h"], F32), "conv": jnp.zeros(sh["conv"], dtype)}
+
+
+def _causal_conv(u, w, b, tail):
+    """u: (B,S,d); w: (K,d) depthwise. tail: (B,K-1,d) history."""
+    K = w.shape[0]
+    upad = jnp.concatenate([tail.astype(u.dtype), u], axis=1)  # (B,S+K-1,d)
+    out = sum(upad[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_tail = upad[:, -(K - 1):] if K > 1 else tail
+    return out + b, new_tail
+
+
+def _rglru_scan(a_log, x_in, h0):
+    """Elementwise linear recurrence via associative scan.
+
+    a_log: (B,S,d) log decay; x_in: (B,S,d) input term; h0: (B,d).
+    h_t = exp(a_log_t) h_{t-1} + x_in_t
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+    # fold h0 into first element
+    x0 = x_in.at[:, 0].add(jnp.exp(a_log[:, 0]) * h0)
+    al, bl = jax.lax.associative_scan(combine, (a_log, x0), axis=1)
+    return bl
+
+
+def rglru_apply(p, x, cfg, state=None, decode=False):
+    B, S, d = x.shape
+    xn = apply_norm(p["norm"], x, cfg.norm)
+    ua = xn @ p["in_a"]
+    ub = jax.nn.gelu(xn @ p["in_b"])
+    if state is None:
+        state = rglru_init_state(cfg, B)
+    u, new_tail = _causal_conv(ua, p["conv_w"], p["conv_b"], state["conv"])
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid((u @ p["wr"]).astype(F32))
+    i = jax.nn.sigmoid((u @ p["wi"]).astype(F32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(F32)) * r     # (B,S,d)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    if decode:
+        assert S == 1
+        h = jnp.exp(log_a[:, 0]) * state["h"] + gated[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        hs = _rglru_scan(log_a, gated, state["h"])
+        new_h = hs[:, -1]
+    y = (hs.astype(x.dtype) * ub) @ p["out"]
+    return x + y, {"h": new_h, "conv": new_tail}

@@ -1,0 +1,133 @@
+"""Transformer blocks (attention kinds + MLP/MoE) with decode caches.
+
+Decode caches for local/chunked attention are ring buffers of size
+window/chunk; a ``kpos`` array records the absolute position held in each
+slot (stale slots are masked out by the attention mask automatically).
+Decode is batch-uniform (all rows at the same position).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (attn_init, attention, apply_norm, mlp_apply,
+                                 mlp_init, norm_init, qkv)
+from repro.models.moe import moe_apply, moe_init
+
+F32 = jnp.float32
+
+
+def attn_block_init(key, cfg, layer_idx, dtype, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cross:
+        p["cross_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn_init(ks[1], cfg, dtype)
+    if cfg.layer_is_moe(layer_idx):
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def cache_size(cfg, kind, seq_len):
+    if kind == "local_attn":
+        return min(cfg.window, seq_len)
+    if kind == "chunked_attn":
+        return min(cfg.chunk, seq_len)
+    return seq_len
+
+
+def _use_rope(cfg, kind):
+    if not cfg.use_rope:
+        return False
+    return kind != "global_attn"          # NoPE layers (llama4 iRoPE)
+
+
+def attn_block_apply(p, x, cfg, kind, rules, positions, *, causal=True,
+                     cache=None, pos=None, enc_out=None, opts=None):
+    """Returns (x, new_cache). cache: {"k","v","kpos"} or None (train)."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    xn = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v = qkv(p["attn"], xn, cfg, positions, _use_rope(cfg, kind), rules)
+    new_cache = None
+    kv_block = opts.kv_block if opts else 1024
+    fth = opts.flash_threshold if opts else 8192
+    if cache is not None and pos is not None:        # decode step
+        Sc = cache["k"].shape[1]
+        slot = pos % Sc
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(cache["kpos"], pos[None].astype(jnp.int32),
+                                            (slot,))
+        if rules is not None:
+            kc = rules.shard(kc, "batch", "seq_kv", None, None)
+            vc = rules.shard(vc, "batch", "seq_kv", None, None)
+        o = attention(q, kc, vc, pos[None], kpos, kind, cfg.window, cfg.chunk,
+                      causal=True, flash_threshold=fth, kv_block=kv_block)
+        new_cache = {"k": kc, "v": vc, "kpos": kpos}
+    else:
+        o = attention(q, k, v, positions, positions, kind, cfg.window, cfg.chunk,
+                      causal=causal, flash_threshold=fth, kv_block=kv_block)
+        if cache is not None:                        # prefill: fill the cache
+            Sc = cache["k"].shape[1]
+            if Sc == S:
+                kpos = positions.astype(jnp.int32)
+                new_cache = {"k": k.astype(cache["k"].dtype),
+                             "v": v.astype(cache["v"].dtype), "kpos": kpos}
+            else:                                    # ring: keep last Sc
+                tail = jnp.arange(S - Sc, S)
+                slots = tail % Sc
+                kc = jnp.zeros_like(cache["k"]).at[:, slots].set(
+                    k[:, tail].astype(cache["k"].dtype))
+                vc = jnp.zeros_like(cache["v"]).at[:, slots].set(
+                    v[:, tail].astype(cache["v"].dtype))
+                kpos = jnp.full((Sc,), -10**9, jnp.int32).at[slots].set(
+                    tail.astype(jnp.int32))
+                new_cache = {"k": kc, "v": vc, "kpos": kpos}
+    o = o.reshape(B, S, H * hd)
+    x = x + o @ p["attn"]["o"]
+    if rules is not None:
+        seq_ax = "seq_act" if (opts and opts.seq_parallel) else None
+        x = rules.shard(x, "batch", seq_ax, None)
+
+    if "cross" in p:                                 # encoder-decoder cross attn
+        xn2 = apply_norm(p["cross_norm"], x, cfg.norm)
+        Bq = xn2.shape[0]
+        qc = (xn2 @ p["cross"]["q"]).reshape(Bq, S, H, hd)
+        if enc_out is not None:                      # fresh K/V from encoder
+            Se = enc_out.shape[1]
+            ck = (enc_out @ p["cross"]["k"]).reshape(Bq, Se, cfg.num_kv_heads, hd)
+            cv = (enc_out @ p["cross"]["v"]).reshape(Bq, Se, cfg.num_kv_heads, hd)
+        else:                                        # decode: from cache
+            ck, cv = cache["ck"], cache["cv"]
+            Se = ck.shape[1]
+        epos = jnp.arange(Se)
+        qpos_c = jnp.zeros((S,), jnp.int32)          # non-causal cross attn
+        oc = attention(qc, ck, cv, qpos_c, epos, "attn", causal=False,
+                       flash_threshold=fth, kv_block=kv_block)
+        x = x + oc.reshape(Bq, S, H * hd) @ p["cross"]["o"]
+        if new_cache is not None:
+            new_cache["ck"], new_cache["cv"] = ck, cv
+        elif cache is not None:
+            new_cache = {"ck": ck, "cv": cv}
+
+    xn3 = apply_norm(p["mlp_norm"], x, cfg.norm)
+    if "moe" in p:
+        y = moe_apply(p["moe"], xn3, cfg, rules,
+                      overlap=(opts.moe_overlap if opts else False),
+                      quantize=(opts.moe_quantize if opts else False))
+    else:
+        y = mlp_apply(p["mlp"], xn3, cfg.act)
+    x = x + y
+    if rules is not None:
+        seq_ax = "seq_act" if (opts and opts.seq_parallel) else None
+        x = rules.shard(x, "batch", seq_ax, None)
+    return x, new_cache

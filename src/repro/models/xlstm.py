@@ -1,0 +1,248 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with recurrent gate connections).
+
+mLSTM is a gated linear recurrence C_t = f_t C_{t-1} + i_t k_t v_t^T with
+exponential input gating and a max-stabilizer m. Training/prefill use a
+chunkwise-parallel formulation (intra-chunk quadratic, inter-chunk state
+carry) — linear in sequence length; decode is a single recurrent step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, apply_norm
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    du = 2 * d
+    H = cfg.num_heads
+    dh = du // H
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "up": dense_init(ks[0], d, 2 * du, dtype),            # -> (u, z-gate)
+        "q": dense_init(ks[1], du, du, dtype),
+        "k": dense_init(ks[2], du, du, dtype),
+        "v": dense_init(ks[3], du, du, dtype),
+        "wi": dense_init(ks[4], du, H, dtype, scale=0.01),
+        "wf": dense_init(ks[5], du, H, dtype, scale=0.01),
+        "bf": jnp.full((H,), 3.0, dtype),                     # forget bias > 0
+        "bi": jnp.zeros((H,), dtype),
+        "hnorm": norm_init(du, "rmsnorm", dtype),             # per-head group norm
+        "down": dense_init(ks[6], du, d, dtype),
+    }
+
+
+def _mlstm_gates(u, p, H):
+    i_raw = (u @ p["wi"]).astype(F32) + p["bi"].astype(F32)    # (B,S,H)
+    f_raw = (u @ p["wf"]).astype(F32) + p["bf"].astype(F32)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return i_raw, log_f
+
+
+def _mlstm_qkv(u, p, H):
+    B, S, du = u.shape
+    dh = du // H
+    q = (u @ p["q"]).reshape(B, S, H, dh)
+    k = (u @ p["k"]).reshape(B, S, H, dh)
+    v = (u @ p["v"]).reshape(B, S, H, dh)
+    return q, k, v, dh
+
+
+def mlstm_state_shape(cfg, B):
+    du = 2 * cfg.d_model
+    H = cfg.num_heads
+    dh = du // H
+    return {"C": (B, H, dh, dh), "n": (B, H, dh), "m": (B, H)}
+
+
+def mlstm_init_state(cfg, B, dtype=F32):
+    sh = mlstm_state_shape(cfg, B)
+    return {"C": jnp.zeros(sh["C"], F32), "n": jnp.zeros(sh["n"], F32),
+            "m": jnp.full(sh["m"], -1e30, F32)}
+
+
+def _mlstm_chunk_scan(q, k, v, i_raw, log_f, state, W):
+    """Chunkwise-parallel mLSTM. q/k/v: (B,S,H,dh); gates (B,S,H)."""
+    B, S, H, dh = q.shape
+    assert S % W == 0, (S, W)
+    nC = S // W
+    scale = 1.0 / math.sqrt(dh)
+
+    # reshape to chunks: (B, nC, W, H, ...)
+    qc = q.reshape(B, nC, W, H, dh).astype(F32) * scale
+    kc = k.reshape(B, nC, W, H, dh).astype(F32)
+    vc = v.reshape(B, nC, W, H, dh).astype(F32)
+    ic = i_raw.reshape(B, nC, W, H)
+    lfc = log_f.reshape(B, nC, W, H)
+
+    def chunk_step(carry, blk):
+        Cb, nb, m0 = carry                    # (B,H,dh,dh), (B,H,dh), (B,H)
+        qb, kb, vb, ib, lfb = blk             # (B,W,H,*)
+        Bt = jnp.cumsum(lfb, axis=1)          # (B,W,H) decay from chunk start
+        # intra-chunk log weights: D[t,s] = Bt[t]-Bt[s]+i[s], s<=t
+        Dts = Bt[:, :, None, :] - Bt[:, None, :, :] + ib[:, None, :, :]
+        tri = jnp.tril(jnp.ones((W, W), bool))
+        Dts = jnp.where(tri[None, :, :, None], Dts, -jnp.inf)
+        # stabilizer per target position
+        m_intra = jnp.max(Dts, axis=2)                        # (B,W,H)
+        m_t = jnp.maximum(m0[:, None] + Bt, m_intra)          # (B,W,H)
+        # inter-chunk: q @ C_bar, scaled by exp(m0 + Bt - m_t)
+        w_inter = jnp.exp(m0[:, None] + Bt - m_t)             # (B,W,H)
+        num_inter = jnp.einsum("bwhd,bhde->bwhe", qb, Cb) * w_inter[..., None]
+        den_inter = jnp.einsum("bwhd,bhd->bwh", qb, nb) * w_inter
+        # intra-chunk
+        P = jnp.exp(Dts - m_t[:, :, None, :])                 # (B,W,W,H)
+        s_qk = jnp.einsum("bwhd,bshd->bwsh", qb, kb)
+        A = s_qk * P
+        num_intra = jnp.einsum("bwsh,bshe->bwhe", A, vb)
+        den_intra = jnp.sum(A, axis=2)                        # (B,W,h)
+        num = num_inter + num_intra
+        den = den_inter + den_intra
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry to next chunk
+        BW = Bt[:, -1]                                        # (B,H) total decay
+        wk = BW[:, None] - Bt + ib                            # (B,W,H)
+        m_next = jnp.maximum(m0 + BW, jnp.max(wk, axis=1))
+        wk = jnp.exp(wk - m_next[:, None])
+        C_next = (jnp.exp(m0 + BW - m_next)[..., None, None] * Cb
+                  + jnp.einsum("bwh,bwhd,bwhe->bhde", wk, kb, vb))
+        n_next = (jnp.exp(m0 + BW - m_next)[..., None] * nb
+                  + jnp.einsum("bwh,bwhd->bhd", wk, kb))
+        return (C_next, n_next, m_next), h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (qc, kc, vc, ic, lfc))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (state["C"], state["n"], state["m"]), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_apply(p, x, cfg, state=None, decode=False):
+    """x: (B,S,d). Returns (y, new_state)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    xn = apply_norm(p["norm"], x, cfg.norm)
+    uz = xn @ p["up"]
+    u, z = jnp.split(uz, 2, axis=-1)                          # (B,S,2d) each
+    q, k, v, dh = _mlstm_qkv(u, p, H)
+    i_raw, log_f = _mlstm_gates(u, p, H)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    if decode:
+        assert S == 1
+        qs, ks, vs = (t[:, 0].astype(F32) for t in (q, k, v))
+        ib, lfb = i_raw[:, 0], log_f[:, 0]
+        m_new = jnp.maximum(lfb + state["m"], ib)
+        fp = jnp.exp(lfb + state["m"] - m_new)
+        ip = jnp.exp(ib - m_new)
+        C = fp[..., None, None] * state["C"] + ip[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", ks, vs)
+        n = fp[..., None] * state["n"] + ip[..., None] * ks
+        qs = qs / math.sqrt(dh)
+        num = jnp.einsum("bhd,bhde->bhe", qs, C)
+        den = jnp.einsum("bhd,bhd->bh", qs, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        h = h[:, None]                                        # (B,1,H,dh)
+        new_state = {"C": C, "n": n, "m": m_new}
+    else:
+        W = min(cfg.mlstm_chunk, S)
+        pad = (-S) % W
+        if pad:
+            # state-preserving pad: i = -inf (no input), log_f = 0 (no decay)
+            zkv = ((0, 0), (0, pad), (0, 0), (0, 0))
+            q, k, v = (jnp.pad(t, zkv) for t in (q, k, v))
+            i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e30)
+            log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        h, new_state = _mlstm_chunk_scan(q, k, v, i_raw, log_f, state, W)
+        if pad:
+            h = h[:, :S]
+    hflat = h.reshape(B, S, H * dh).astype(x.dtype)
+    hflat = apply_norm(p["hnorm"], hflat, "rmsnorm")
+    out = (hflat * jax.nn.silu(z)) @ p["down"]
+    return x + out, new_state
+
+
+# -------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ff = -(-int(4 * d / 3) // 16) * 16            # shard-friendly multiple of 16
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": norm_init(d, cfg.norm, dtype),
+        "w": dense_init(ks[0], d, 4 * d, dtype),              # i,f,z,o
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh), F32)
+              / math.sqrt(dh)).astype(dtype),                 # recurrent (block-diag)
+        "b": jnp.concatenate([jnp.zeros((d,), dtype),
+                              jnp.full((d,), 3.0, dtype),     # forget bias
+                              jnp.zeros((2 * d,), dtype)]),
+        "ffn_norm": norm_init(d, cfg.norm, dtype),
+        "ff_gate": dense_init(ks[2], d, ff, dtype),
+        "ff_up": dense_init(ks[3], d, ff, dtype),
+        "ff_down": dense_init(ks[4], ff, d, dtype),
+    }
+
+
+def slstm_state_shape(cfg, B):
+    d = cfg.d_model
+    return {"c": (B, d), "n": (B, d), "h": (B, d), "m": (B, d)}
+
+
+def slstm_init_state(cfg, B, dtype=F32):
+    sh = slstm_state_shape(cfg, B)
+    return {k: (jnp.full(v, -1e30, F32) if k == "m" else jnp.zeros(v, F32))
+            for k, v in sh.items()}
+
+
+def _slstm_cell(state, wx_t, r, H):
+    """One step. wx_t: (B, 4d) precomputed Wx+b; state dict of (B,d)."""
+    B, d4 = wx_t.shape
+    d = d4 // 4
+    dh = d // H
+    h_prev = state["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, r.astype(F32)).reshape(B, 4 * d)
+    g = wx_t + rec
+    i_raw, f_raw, z_raw, o_raw = jnp.split(g, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    ip = jnp.exp(i_raw - m_new)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    c = fp * state["c"] + ip * jnp.tanh(z_raw)
+    n = fp * state["n"] + ip
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p, x, cfg, state=None, decode=False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    xn = apply_norm(p["norm"], x, cfg.norm)
+    wx = (xn @ p["w"]).astype(F32) + p["b"].astype(F32)        # (B,S,4d)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    if decode:
+        assert S == 1
+        new_state = _slstm_cell(state, wx[:, 0], p["r"], H)
+        h = new_state["h"][:, None]
+    else:
+        def step(st, wx_t):
+            st2 = _slstm_cell(st, wx_t, p["r"], H)
+            return st2, st2["h"]
+        new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)                                  # (B,S,d)
+    y = x + h.astype(x.dtype)
+    # post up-projection gated FFN
+    yn = apply_norm(p["ffn_norm"], y, cfg.norm)
+    ff = jax.nn.gelu(yn @ p["ff_gate"]) * (yn @ p["ff_up"])
+    return y + ff @ p["ff_down"], new_state

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, init_opt_state, adamw_update,
+                               opt_state_specs, lr_at)
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "opt_state_specs",
+           "lr_at"]

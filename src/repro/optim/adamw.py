@@ -1,0 +1,81 @@
+"""AdamW with f32 master weights + moments, global-norm clipping, cosine
+schedule, and ZeRO-style state sharding (moments/master additionally sharded
+over the data axis via ``zero_spec``)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import zero_spec
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, F32)
+    warm = cfg.peak_lr * step / max(1, cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    master = jax.tree.map(lambda p: p.astype(F32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, zeros),
+            "master": master, "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_spec_tree, param_shapes, rules):
+    """Specs for the opt state: params' specs + ZeRO extra data-sharding."""
+    from jax.sharding import PartitionSpec as P
+
+    def z(spec, sds):
+        return zero_spec(spec, sds.shape, rules)
+
+    zt = jax.tree.map(z, param_spec_tree, param_shapes,
+                      is_leaf=lambda s: isinstance(s, P))
+    return {"m": zt, "v": zt, "master": zt, "step": P()}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    # global-norm clip in f32
+    gsq = sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    c1 = 1 - cfg.b1 ** step.astype(F32)
+    c2 = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(F32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        w2 = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return w2.astype(p.dtype), m2, v2, w2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], state["master"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_w = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "master": new_w, "step": step}, gnorm

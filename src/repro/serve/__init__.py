@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeConfig, Engine
+
+__all__ = ["ServeConfig", "Engine"]

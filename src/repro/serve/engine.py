@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill -> KV cache -> greedy/sampled decode.
+
+Also implements **disaggregated prefill/decode** (the paper's KV-transfer
+workload at system level): ``prefill_remote`` runs prefill as if on a prefill
+tier and ships the cache to the decode tier — on real hardware via the
+device-initiated kv_shuttle kernel; the engine-level handoff here is the
+cache pytree handover, with the kernel exercised by the workload benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import StepOptions, decode_step, prefill_step
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int = 512
+    temperature: float = 0.0          # 0 = greedy
+    seed: int = 0
+    opts: StepOptions = None
+
+    def __post_init__(self):
+        if self.opts is None:
+            self.opts = StepOptions(remat=False)
+
+
+class Engine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig, rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.rules = rules
+        self._prefill = jax.jit(
+            lambda p, b: prefill_step(p, b, cfg, rules,
+                                      seq_len=serve_cfg.max_seq,
+                                      opts=serve_cfg.opts))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, rules,
+                                             opts=serve_cfg.opts))
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1] / self.scfg.temperature).astype(jnp.int32)
+
+    def prefill(self, batch):
+        """batch: {"tokens": (B, S0), ...} -> (first_token, cache, pos)."""
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        tok = self._sample(logits, key)
+        return tok, cache, batch["tokens"].shape[1]
+
+    def generate(self, batch, max_new_tokens):
+        """Batched greedy/sampled generation. Returns (B, new) tokens."""
+        tok, cache, pos = self.prefill(batch)
+        out = [tok]
+        key = jax.random.PRNGKey(self.scfg.seed)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         jnp.int32(pos + i))
+            tok = self._sample(logits, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    # ---- disaggregated prefill/decode tiers ------------------------------
+    def prefill_remote(self, batch):
+        """Prefill-tier step: returns the cache pytree to ship to decode.
+        On hardware the KV blocks ride the device-initiated kv_shuttle
+        (repro.kernels.kv_shuttle); the engine hands over the pytree."""
+        tok, cache, pos = self.prefill(batch)
+        return {"first_token": tok, "cache": cache, "pos": pos}
+
+    def decode_from_handoff(self, handoff, max_new_tokens):
+        tok = handoff["first_token"]
+        cache = handoff["cache"]
+        pos = handoff["pos"]
+        out = [tok]
+        key = jax.random.PRNGKey(self.scfg.seed + 1)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         jnp.int32(pos + i))
+            tok = self._sample(logits, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,6 @@
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, \
+    latest_step
+from repro.train.loop import TrainConfig, train
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "TrainConfig", "train"]

@@ -1,0 +1,73 @@
+"""Fault tolerance & elasticity for the training loop.
+
+Mechanisms (designed for 1000+ nodes; exercised in tests on host devices):
+
+* **Preemption-aware checkpointing** — SIGTERM/SIGINT installs a "save at the
+  next step boundary" flag; the loop drains and persists atomically.
+* **Checkpoint/restart** — pure function of (checkpoint, step): the
+  index-addressable data pipeline makes resume exact (tests assert
+  bit-equal losses between an uninterrupted run and a killed+resumed run).
+* **Elastic re-mesh** — checkpoints store global arrays; on restart with a
+  different device count the state is re-sharded under the new mesh
+  (tests restore a 4-device run onto 2 devices).
+* **Straggler mitigation** — synchronous SPMD steps cannot proceed without
+  every worker; the watchdog measures per-step wall time against a rolling
+  median and flags persistent stragglers for the scheduler to replace
+  (replacement itself = preempt + elastic restart, both implemented).
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+class PreemptionGuard:
+    """Installs signal handlers that request a graceful save+exit."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+@dataclass
+class StragglerWatchdog:
+    """Rolling-median step-time monitor. A worker consistently slower than
+    ``threshold`` x median is reported as a straggler."""
+    window: int = 32
+    threshold: float = 2.0
+    min_samples: int = 8
+    times: list = field(default_factory=list)
+    incidents: int = 0
+
+    def record(self, step_time_s: float) -> bool:
+        """Returns True if this step is a straggler incident."""
+        self.times.append(step_time_s)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) < self.min_samples:
+            return False
+        med = statistics.median(self.times[:-1])
+        if step_time_s > self.threshold * med:
+            self.incidents += 1
+            return True
+        return False
+
+    @property
+    def should_replace(self):
+        return self.incidents >= 3

@@ -1,0 +1,117 @@
+"""Training loop: sharded train_step + checkpoint/restart + preemption +
+straggler watchdog. The same loop drives the 100M-parameter e2e example and
+the smoke tests."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.dist.sharding import Rules, sanitize_specs
+from repro.models import StepOptions, init_params, param_specs, train_loss
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, \
+    opt_state_specs
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.fault_tolerance import PreemptionGuard, StragglerWatchdog
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    opts: StepOptions = field(default_factory=StepOptions)
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def build_state(key, cfg, mesh, rules):
+    params = init_params(key, cfg)
+    opt_state = init_opt_state(params)
+    if mesh is not None:
+        p_sds = jax.eval_shape(lambda k: init_params(k, cfg), key)
+        specs = sanitize_specs(param_specs(cfg, rules), p_sds, mesh)
+        o_specs = opt_state_specs(specs, p_sds, rules)
+        params = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda s: isinstance(s, P)))
+        opt_state = jax.device_put(opt_state, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), o_specs,
+            is_leaf=lambda s: isinstance(s, P)))
+        return params, opt_state, specs, o_specs
+    return params, opt_state, None, None
+
+
+def train(cfg, tcfg: TrainConfig, mesh=None, *, resume=True, verbose=True,
+          max_steps_this_run=None):
+    """Returns (losses, last_step, state). Interruptible + resumable."""
+    rules = Rules(mesh, "train") if mesh is not None else None
+    key = jax.random.PRNGKey(tcfg.seed)
+    params, opt_state, specs, o_specs = build_state(key, cfg, mesh, rules)
+
+    start = 0
+    if resume and tcfg.ckpt_dir:
+        shardings = None
+        if mesh is not None:
+            shardings = {"params": jax.tree.map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda s: isinstance(s, P)),
+                "opt": jax.tree.map(
+                lambda s: NamedSharding(mesh, s), o_specs,
+                is_leaf=lambda s: isinstance(s, P))}
+        restored, step = restore_checkpoint(
+            tcfg.ckpt_dir, {"params": params, "opt": opt_state},
+            shardings=shardings)
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start = step
+            if verbose:
+                print(f"[train] resumed from step {start}")
+
+    data = SyntheticTokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+        global_batch=tcfg.global_batch, seed=tcfg.seed,
+        frames=cfg.enc_seq if cfg.is_encoder_decoder else 0,
+        patches=cfg.num_patch_tokens, d_model=cfg.d_model))
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(p, batch, cfg, rules, tcfg.opts))(params)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                tcfg.opt)
+        return params, opt_state, loss, gnorm
+
+    losses = []
+    watchdog = StragglerWatchdog()
+    end = tcfg.steps if max_steps_this_run is None else \
+        min(tcfg.steps, start + max_steps_this_run)
+    with PreemptionGuard() as guard:
+        for step in range(start, end):
+            t0 = time.perf_counter()
+            batch = data.batch(step)
+            params, opt_state, loss, gnorm = step_fn(params, opt_state, batch)
+            loss = float(loss)
+            losses.append(loss)
+            watchdog.record(time.perf_counter() - t0)
+            if verbose and (step % tcfg.log_every == 0):
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(gnorm):.3f}")
+            done = step + 1
+            if tcfg.ckpt_dir and (done % tcfg.ckpt_every == 0
+                                  or done == tcfg.steps or guard.requested):
+                save_checkpoint(tcfg.ckpt_dir, done,
+                                {"params": params, "opt": opt_state})
+            if guard.requested:
+                if verbose:
+                    print(f"[train] preemption requested — saved at {done}")
+                break
+    return losses, (step + 1 if losses else start), (params, opt_state)

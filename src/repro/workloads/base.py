@@ -1,0 +1,78 @@
+"""Workload protocol for the co-design search.
+
+A workload exposes:
+  * ``reference``       — pure-jnp oracle over global arrays,
+  * ``host_baseline``   — the host-driven input program (XLA collectives,
+                          strictly sequenced; what a user writes before
+                          device-initiated redesign),
+  * ``build(directive)``— the directive-realized implementation (the bounded
+                          operator's output), and
+  * ``analytic_cost``   — the l3 roofline model of one step at the paper's
+                          full deployment shape (this container is CPU-only,
+                          so empirical latency is replaced by a v5e roofline
+                          composition; see DESIGN.md §2).
+
+Builders must be *semantics-preserving*: every directive that validates for
+the workload's traits produces the same numbers (cascade l2 checks this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.design_space import Directive, violations
+
+WORKLOADS = {}
+
+
+def register(cls):
+    WORKLOADS[cls.name] = cls
+    return cls
+
+
+def get_workload(name: str, **kw):
+    return WORKLOADS[name](**kw)
+
+
+# rough per-event overheads (seconds) used by the analytic l3 model
+BARRIER_OVERHEAD = 2e-6          # global rendezvous per occurrence
+SIGNAL_OVERHEAD = 0.3e-6         # point-to-point semaphore wait
+KERNEL_LAUNCH = 4e-6             # host-driven launch gap per phase
+TILE_SYNC = 0.5e-6               # per-tile counter/semaphore check
+
+
+@dataclass
+class Workload:
+    name = "abstract"
+    ring_topology = False
+    kernelizable = True
+
+    # dimensions the evolve-block annotation marks as mutable
+    evolve_dims = ("backend", "completion", "placement", "ordering",
+                   "granularity", "contexts", "issuer", "scope")
+
+    def traits(self, hw=None):
+        return dict(kernelizable=self.kernelizable,
+                    ring_topology=self.ring_topology,
+                    has_dcn=bool(hw and hw.has_dcn))
+
+    def check(self, d: Directive, hw=None):
+        return violations(d, **self.traits(hw))
+
+    # --- to implement ---
+    def example_inputs(self, key, mesh):
+        raise NotImplementedError
+
+    def reference(self, *inputs):
+        raise NotImplementedError
+
+    def host_baseline(self, mesh):
+        raise NotImplementedError
+
+    def build(self, directive: Directive, mesh):
+        raise NotImplementedError
+
+    def analytic_cost(self, directive: Directive, hw) -> float:
+        raise NotImplementedError
+
+    def default_tunables(self):
+        return {}

@@ -1,0 +1,126 @@
+"""Workload 4: GEMM + AllGather (paper Appendix M; the minimal post-compute
+collective).
+
+Host baseline: local GEMM, then an XLA all-gather of the full output —
+sequential by data dependence.
+
+Device-initiated builds: repro.kernels.gemm_allgather — the result tile is
+broadcast to peers by remote DMA as soon as it is computed (TILE_FUSED,
+G=PER_TILE), or per-peer slabs after the full GEMM (DEFERRED). The XLA
+STREAM_SPLIT build chunks the GEMM and all-gathers chunk c while chunk c+1
+computes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.design_space import Directive
+from repro.kernels.gemm_allgather import gemm_allgather as ga_kernel
+from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
+                                  SIGNAL_OVERHEAD, TILE_SYNC, Workload,
+                                  register)
+
+
+@register
+class GemmAllGather(Workload):
+    name = "gemm_allgather"
+    ring_topology = False
+    kernelizable = True
+
+    def __init__(self, n_dev=4, M=4096, K=4096, N=4096, axis="x"):
+        self.n_dev = n_dev
+        self.M = M
+        self.K = K
+        self.N = N
+        self.axis = axis
+
+    def example_inputs(self, key, mesh, M_l=None):
+        M_l = M_l or 128
+        K, N = min(self.K, 128), min(self.N, 128)
+        ks = jax.random.split(key, 2)
+        a = jax.random.normal(ks[0], (self.n_dev, M_l, K), jnp.float32)
+        b = jax.random.normal(ks[1], (K, N), jnp.float32)
+        return a, b
+
+    def reference(self, a, b):
+        from repro.kernels.ref import gemm_allgather_ref
+        return gemm_allgather_ref(a, b)
+
+    # ------------------------------------------------------------- builders
+    def host_baseline(self, mesh):
+        axis = self.axis
+
+        @functools.partial(jax.shard_map, mesh=mesh,
+                           in_specs=(P(axis), P(None, None)),
+                           out_specs=P(axis), check_vma=False)
+        def run(a, b):
+            c = a[0] @ b
+            return jax.lax.all_gather(c, axis, tiled=True)[None]
+
+        return run
+
+    def _stream_split(self, mesh, chunks):
+        axis = self.axis
+
+        @functools.partial(jax.shard_map, mesh=mesh,
+                           in_specs=(P(axis), P(None, None)),
+                           out_specs=P(axis), check_vma=False)
+        def run(a, b):
+            a = a[0]
+            M_l = a.shape[0]
+            cs = max(1, M_l // chunks)
+            outs = []
+            for c0 in range(0, M_l, cs):
+                c = a[c0:c0 + cs] @ b            # chunk c+1's GEMM is
+                outs.append(jax.lax.all_gather(c, axis, tiled=False))
+            # (n, cs, N) chunks -> (n*M_l, N)
+            full = jnp.concatenate(outs, axis=1)
+            return full.reshape(-1, b.shape[1])[None]
+
+        return run
+
+    def build(self, d: Directive, mesh):
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                return self._stream_split(mesh, int(d.tunable("chunks", 4)))
+            return self.host_baseline(mesh)
+        fused = d.placement in ("TILE_FUSED", "TILE_PIPELINED")
+        tile_m = int(d.tunable("tile_m", 128))
+
+        def run(a, b):
+            return ga_kernel(a, b, mesh, axis=self.axis, tile_m=tile_m,
+                             fused=fused)
+
+        return run
+
+    def default_tunables(self):
+        return {"tile_m": 128, "chunks": 4}
+
+    # --------------------------------------------------------- l3 cost model
+    def analytic_cost(self, d: Directive, hw) -> float:
+        n = self.n_dev
+        M_l = self.M // n
+        t_gemm = 2.0 * M_l * self.K * self.N / hw.chip.peak_bf16_flops
+        wire = (n - 1) * M_l * self.N * 2            # my slab to n-1 peers
+        t_wire = wire / hw.chip.ici_link_bw
+        sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                chunks = max(1, int(d.tunable("chunks", 4)))
+                per = t_gemm / chunks
+                pw = t_wire / chunks
+                # chunk c's gather overlaps chunk c+1's GEMM
+                return per + max((chunks - 1) * per, (chunks - 1) * pw) + pw \
+                    + sync + KERNEL_LAUNCH * 2
+            return t_gemm + t_wire + sync + KERNEL_LAUNCH * 2
+        if d.placement in ("TILE_FUSED", "TILE_PIPELINED"):
+            tiles = max(1, M_l // max(1, int(d.tunable("tile_m", 128))))
+            per = t_gemm / tiles
+            pw = t_wire / tiles
+            return per + max((tiles - 1) * per, (tiles - 1) * pw) + pw \
+                + tiles * TILE_SYNC + sync + KERNEL_LAUNCH
+        return t_gemm + t_wire + sync + KERNEL_LAUNCH

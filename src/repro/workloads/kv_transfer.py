@@ -1,0 +1,126 @@
+"""Workload 3: KV-cache transfer for disaggregated prefill->decode serving
+(paper Table 4 row 3, Appendix M).
+
+Host baseline: the prefill rank computes K and V projections, then a single
+host-sequenced transfer moves both — the network idles during compute and
+compute idles during the transfer (the compute-to-send gap).
+
+Device-initiated build: the chained kernel (repro.kernels.kv_shuttle) —
+K GEMM -> start K send -> V GEMM (overlapping K's flight) -> V send+signal;
+the decode rank waits on-device. XLA STREAM_SPLIT build: two independent
+ppermute chains let XLA overlap K's transfer with V's GEMM at graph level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.design_space import Directive
+from repro.kernels.kv_shuttle import kv_shuttle as shuttle_kernel
+from repro.workloads.base import (KERNEL_LAUNCH, SIGNAL_OVERHEAD,
+                                  BARRIER_OVERHEAD, Workload, register)
+
+
+@register
+class KVTransfer(Workload):
+    name = "kv_transfer"
+    ring_topology = False
+    kernelizable = True
+
+    def __init__(self, T=4096, d=4096, dk=512, axis="x"):
+        self.n_dev = 2
+        self.T = T
+        self.d = d
+        self.dk = dk
+        self.axis = axis
+
+    def example_inputs(self, key, mesh, T=None):
+        T = T or min(self.T, 128)
+        ks = jax.random.split(key, 3)
+        x_real = jax.random.normal(ks[0], (T, self.d // 8), jnp.float32)
+        x = jnp.stack([x_real, jnp.zeros_like(x_real)])
+        wk = jax.random.normal(ks[1], (self.d // 8, self.dk // 4), jnp.float32)
+        wv = jax.random.normal(ks[2], (self.d // 8, self.dk // 4), jnp.float32)
+        return x, wk, wv
+
+    def reference(self, x, wk, wv):
+        k = x[0] @ wk
+        v = x[0] @ wv
+        z = jnp.zeros_like(k)
+        return jnp.stack([z, k]), jnp.stack([jnp.zeros_like(v), v])
+
+    # ------------------------------------------------------------- builders
+    def host_baseline(self, mesh):
+        axis = self.axis
+
+        @functools.partial(jax.shard_map, mesh=mesh,
+                           in_specs=(P(axis), P(None, None), P(None, None)),
+                           out_specs=(P(axis), P(axis)), check_vma=False)
+        def run(x, wk, wv):
+            xs = x[0]
+            me = jax.lax.axis_index(axis)
+            k = xs @ wk
+            v = xs @ wv
+            kv = jnp.concatenate([k, v], axis=-1)     # one bundled transfer
+            kv = jax.lax.ppermute(kv, axis, [(0, 1)])
+            dk = k.shape[-1]
+            k_out = jnp.where(me == 1, kv[:, :dk], 0.0)
+            v_out = jnp.where(me == 1, kv[:, dk:], 0.0)
+            return k_out[None], v_out[None]
+
+        return run
+
+    def _stream_split(self, mesh):
+        axis = self.axis
+
+        @functools.partial(jax.shard_map, mesh=mesh,
+                           in_specs=(P(axis), P(None, None), P(None, None)),
+                           out_specs=(P(axis), P(axis)), check_vma=False)
+        def run(x, wk, wv):
+            xs = x[0]
+            me = jax.lax.axis_index(axis)
+            k = xs @ wk
+            k_sent = jax.lax.ppermute(k, axis, [(0, 1)])   # K flies while ...
+            v = xs @ wv                                    # ... V computes
+            v_sent = jax.lax.ppermute(v, axis, [(0, 1)])
+            k_out = jnp.where(me == 1, k_sent, 0.0)
+            v_out = jnp.where(me == 1, v_sent, 0.0)
+            return k_out[None], v_out[None]
+
+        return run
+
+    def build(self, d: Directive, mesh):
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                return self._stream_split(mesh)
+            return self.host_baseline(mesh)
+        chained = d.placement in ("STREAM_SPLIT", "TILE_PIPELINED",
+                                  "TILE_FUSED") and d.ordering != "ACQREL"
+
+        def run(x, wk, wv):
+            return shuttle_kernel(x, wk, wv, mesh, axis=self.axis,
+                                  chained=chained)
+
+        return run
+
+    # --------------------------------------------------------- l3 cost model
+    def analytic_cost(self, d: Directive, hw) -> float:
+        T, dd, dk = self.T, self.d, self.dk
+        t_gemm = 2.0 * T * dd * dk / hw.chip.peak_bf16_flops
+        t_send = T * dk * 2 / hw.chip.ici_link_bw
+        sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
+        chained = d.placement in ("STREAM_SPLIT", "TILE_PIPELINED",
+                                  "TILE_FUSED") and d.ordering != "ACQREL"
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                # K send overlaps V GEMM; V send exposed
+                return (t_gemm + max(t_send, t_gemm) + t_send + sync
+                        + 2 * KERNEL_LAUNCH)
+            # bundled: both GEMMs then one 2x transfer
+            return 2 * t_gemm + 2 * t_send + sync + 2 * KERNEL_LAUNCH
+        if chained:
+            return t_gemm + max(t_send, t_gemm) + t_send + sync + KERNEL_LAUNCH
+        return 2 * t_gemm + 2 * t_send + sync + KERNEL_LAUNCH

@@ -1,0 +1,173 @@
+"""Workload 1: Flash Attention with Context Parallelism (ring attention).
+
+Host-driven baseline: one attention round per held KV shard, with an XLA
+``ppermute`` between rounds — each round's compute depends on the permute
+result, forcing strictly sequential execution (the paper's Figure 7 host
+timeline: exchange / compute / exchange / …).
+
+Device-initiated builds rotate KV *inside* a Pallas kernel via remote DMA
+(repro.kernels.ring_attention) with deferred or per-tile-pipelined placement.
+An XLA STREAM_SPLIT build double-buffers the permute at graph level so XLA's
+async collective scheduler can overlap it with the round's compute.
+
+Full deployment shape (paper §4.2): 4 devices, SEQ in {4096, 8192},
+HD in {32, 64}, GPT-2-ish multi-head layout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.design_space import Directive
+from repro.kernels.ref import flash_attention_ref, ring_attention_ref
+from repro.kernels.ring_attention import ring_attention as ring_kernel
+from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
+                                  SIGNAL_OVERHEAD, TILE_SYNC, Workload,
+                                  register)
+
+
+@register
+class RingAttention(Workload):
+    name = "ring_attention"
+    ring_topology = True
+    kernelizable = True
+
+    def __init__(self, n_dev=4, BH=8, seq=4096, hd=64, axis="x"):
+        self.n_dev = n_dev
+        self.BH = BH
+        self.seq = seq
+        self.hd = hd
+        self.sl = seq // n_dev
+        self.axis = axis
+
+    def example_inputs(self, key, mesh, sl=None):
+        sl = sl or min(self.sl, 128)
+        ks = jax.random.split(key, 3)
+        shape = (self.n_dev, self.BH, sl, self.hd)
+        return tuple(jax.random.normal(k, shape, jnp.float32) for k in ks)
+
+    def reference(self, q, k, v):
+        return ring_attention_ref(q, k, v, causal=True)
+
+    # ------------------------------------------------------------- builders
+    def host_baseline(self, mesh):
+        """Sequential rounds with an XLA collective-permute between them."""
+        axis, n = self.axis, self.n_dev
+
+        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+                           out_specs=P(axis), check_vma=False)
+        def run(q, k, v):
+            q, k, v = q[0], k[0], v[0]
+            me = jax.lax.axis_index(axis)
+            sl = q.shape[1]
+            perm = [(i, (i + 1) % n) for i in range(n)]
+            qpos = me * sl + jnp.arange(sl)
+
+            def round_fn(carry, r):
+                k_c, v_c, m, l, acc = carry
+                src = (me - r) % n
+                kpos = src * sl + jnp.arange(sl)
+                s = jnp.einsum("bqd,bkd->bqk", q, k_c) / math.sqrt(self.hd)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, -1e30)
+                m_new = jnp.maximum(m, jnp.max(s, -1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + jnp.sum(p, -1)
+                acc = acc * alpha[..., None] + jnp.einsum("bqk,bkd->bqd", p, v_c)
+                # host-driven: next round's KV arrives only after this
+                # round's compute (data dependence = sequential)
+                k_n = jax.lax.ppermute(k_c, axis, perm)
+                v_n = jax.lax.ppermute(v_c, axis, perm)
+                return (k_n, v_n, m_new, l, acc), None
+
+            m0 = jnp.full(q.shape[:2], -1e30)
+            l0 = jnp.zeros(q.shape[:2])
+            a0 = jnp.zeros_like(q)
+            (k_f, v_f, m, l, acc), _ = jax.lax.scan(
+                round_fn, (k, v, m0, l0, a0), jnp.arange(n))
+            return (acc / jnp.maximum(l, 1e-30)[..., None])[None].astype(q.dtype)
+
+        return run
+
+    def _stream_split(self, mesh):
+        """Overlap at graph level: the permute for round r+1 is issued before
+        round r's compute and carries no dependence on it."""
+        axis, n = self.axis, self.n_dev
+
+        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+                           out_specs=P(axis), check_vma=False)
+        def run(q, k, v):
+            q, k, v = q[0], k[0], v[0]
+            me = jax.lax.axis_index(axis)
+            sl = q.shape[1]
+            perm = [(i, (i + 1) % n) for i in range(n)]
+            qpos = me * sl + jnp.arange(sl)
+
+            def round_fn(carry, r):
+                k_c, v_c, m, l, acc = carry
+                # issue the rotation FIRST: independent of this round's math
+                k_n = jax.lax.ppermute(k_c, axis, perm)
+                v_n = jax.lax.ppermute(v_c, axis, perm)
+                src = (me - r) % n
+                kpos = src * sl + jnp.arange(sl)
+                s = jnp.einsum("bqd,bkd->bqk", q, k_c) / math.sqrt(self.hd)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, -1e30)
+                m_new = jnp.maximum(m, jnp.max(s, -1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + jnp.sum(p, -1)
+                acc = acc * alpha[..., None] + jnp.einsum("bqk,bkd->bqd", p, v_c)
+                return (k_n, v_n, m_new, l, acc), None
+
+            m0 = jnp.full(q.shape[:2], -1e30)
+            l0 = jnp.zeros(q.shape[:2])
+            a0 = jnp.zeros_like(q)
+            (k_f, v_f, m, l, acc), _ = jax.lax.scan(
+                round_fn, (k, v, m0, l0, a0), jnp.arange(n))
+            return (acc / jnp.maximum(l, 1e-30)[..., None])[None].astype(q.dtype)
+
+        return run
+
+    def build(self, d: Directive, mesh):
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                return self._stream_split(mesh)
+            return self.host_baseline(mesh)
+        pipelined = d.placement in ("TILE_PIPELINED", "TILE_FUSED")
+        eager = d.ordering == "ACQREL" or d.placement == "TILE_FUSED"
+
+        def run(q, k, v):
+            return ring_kernel(q, k, v, mesh, axis=self.axis, causal=True,
+                               pipelined=pipelined, eager_wait=eager)
+
+        return run
+
+    # --------------------------------------------------------- l3 cost model
+    def analytic_cost(self, d: Directive, hw) -> float:
+        n, BH, sl, hd = self.n_dev, self.BH, self.sl, self.hd
+        flops_round = 4.0 * BH * sl * sl * hd          # qk^T + pv (causal ~1/2
+        flops_round *= 0.5 * (1 + 1.0 / n)             # avg causal occupancy)
+        t_comp = flops_round / hw.chip.peak_bf16_flops
+        wire_round = 2 * BH * sl * hd * 2              # K and V, bf16
+        t_wire = wire_round / hw.chip.ici_link_bw
+        sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
+        if d.backend == "XLA_COLLECTIVE":
+            if d.placement == "STREAM_SPLIT":
+                per_round = max(t_comp, t_wire) + sync
+            else:
+                per_round = t_comp + t_wire + sync + KERNEL_LAUNCH
+            return n * per_round + KERNEL_LAUNCH * n   # per-round host launches
+        # Pallas device-initiated: no host launches inside the ring
+        if d.placement in ("TILE_PIPELINED",):
+            per_round = max(t_comp, t_wire) + sync
+            if d.ordering == "ACQREL":                 # eager fences serialize
+                per_round = t_comp + t_wire + sync
+        elif d.placement == "TILE_FUSED":
+            per_round = max(t_comp, t_wire) + TILE_SYNC * BH + sync
+        else:                                          # DEFERRED in-kernel
+            per_round = t_comp + t_wire + sync
+        return n * per_round + KERNEL_LAUNCH           # one cooperative launch

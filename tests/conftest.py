@@ -1,0 +1,7 @@
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (multi-device tests spawn subprocesses or
+# build their own small meshes inside dedicated modules).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

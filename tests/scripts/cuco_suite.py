@@ -1,0 +1,39 @@
+"""CUCo end-to-end: analyzer -> fast path -> slow path on two workloads;
+search invariants (archive dominance, novelty, monotone best-so-far)."""
+import jax
+
+from repro.core import (CascadeEvaluator, SlowPathConfig,
+                        extract_hardware_context, fast_path, slow_path)
+from repro.launch.mesh import make_mesh
+from repro.workloads import get_workload
+
+mesh = make_mesh((4,), ("x",))
+hw = extract_hardware_context(mesh)
+
+for wname, kw in [("gemm_allgather", dict(n_dev=4, M=4096, K=4096, N=4096)),
+                  ("moe_dispatch", dict(n_dev=4, tokens_per_rank=512, d=128,
+                                        f=256, skew=3.0))]:
+    w = get_workload(wname, **kw)
+    seed = fast_path(w, mesh, hw)
+    assert seed.candidate.result.ok
+    assert seed.graph.nodes, "analyzer must find the host collectives"
+    res = slow_path(seed, mesh, hw,
+                    SlowPathConfig(islands=2, generations=6, seed=1))
+    assert res.best is not None and res.best.result.ok
+    assert res.best.score >= res.seed_score * 0.999, (
+        wname, res.best.score, res.seed_score)
+    # archive dominance invariant: each cell's elite is the best of its kind
+    for b, elite in res.archive.cells.items():
+        same = [r for r in res.db.records
+                if r.directive.behavior == b and r.result and r.result.ok]
+        assert elite.score == max(c.score for c in same)
+    # best-so-far series is monotone
+    series = res.best_per_generation()
+    assert all(series[i][1] <= series[i + 1][1]
+               for i in range(len(series) - 1))
+    # novelty: no duplicate directives in the db
+    seen = [r.directive for r in res.db.records]
+    assert len({d for d in seen}) == len(seen), "novelty filter violated"
+    print(wname, "search ok: %.1f -> %.1f" % (res.seed_score, res.best.score))
+
+print("ALL OK")

@@ -1,0 +1,63 @@
+"""Checkpointing: round-trip identity (hypothesis), atomicity, retention,
+bf16 handling, manifest recovery."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+
+def test_roundtrip_identity(tmp_path):
+    state = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+             "nested": {"b": jnp.ones((2, 2), jnp.bfloat16),
+                        "step": jnp.int32(7)}}
+    save_checkpoint(tmp_path, 5, state)
+    restored, step = restore_checkpoint(tmp_path, state)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@given(st.lists(st.floats(-1e6, 1e6, width=32), min_size=1, max_size=32),
+       st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_property(vals, step):
+    import tempfile
+    state = {"w": jnp.asarray(vals, jnp.float32)}
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(td, step, state)
+        restored, s = restore_checkpoint(td, state)
+        assert s == step
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+
+
+def test_no_tmp_files_left(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.ones(3)})
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+def test_retention(tmp_path):
+    for s in range(6):
+        save_checkpoint(tmp_path, s, {"w": jnp.ones(3)}, keep=3)
+    ckpts = sorted(pathlib.Path(tmp_path).glob("step_*.npz"))
+    assert len(ckpts) == 3
+    assert latest_step(tmp_path) == 5
+
+
+def test_restore_missing_returns_none(tmp_path):
+    state, step = restore_checkpoint(tmp_path, {"w": jnp.ones(3)})
+    assert state is None and step is None
+
+
+def test_elastic_restore_shape_checked(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.ones((4, 4))})
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, {"w": jnp.ones((2, 4))})

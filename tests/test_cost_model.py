@@ -1,0 +1,88 @@
+"""HLO collective parser + roofline model unit tests."""
+import pytest
+
+from repro.core.cost_model import (CollectiveOp, RooflineReport,
+                                   parse_collectives, _wire_factor)
+from repro.core.hardware import V5E
+
+HLO = """
+HloModule test
+%psum.1 = f32[16,4096,2048]{2,1,0} all-reduce(f32[16,4096,2048]{2,1,0} %x), replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+%ag.1 = bf16[256,1024]{1,0} all-gather(bf16[16,1024]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+%rs = bf16[16,1024]{1,0} reduce-scatter(bf16[256,1024]{1,0} %z), replica_groups=[1,512]<=[512], dimensions={0}
+%a2a-start = (bf16[32,128,64]{2,1,0}, bf16[32,128,64]{2,1,0}) all-to-all-start(bf16[32,128,64]{2,1,0} %w), replica_groups=[16,32]<=[512]
+%cp = f32[8,128]{1,0} collective-permute(f32[8,128]{1,0} %v), source_target_pairs={{0,1},{1,2}}
+%prom = bf16[4,4]{1,0} all-reduce(bf16[4,4]{1,0} %u), replica_groups=[2,2]<=[4], to_apply=%add.clone_promoted
+"""
+
+
+def test_parse_finds_all_kinds():
+    ops = parse_collectives(HLO, chips_per_pod=256)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+
+
+def test_wire_factors():
+    assert _wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert _wire_factor("all-gather", 16) == pytest.approx(15 / 16)
+    assert _wire_factor("collective-permute", 2) == 1.0
+    assert _wire_factor("all-reduce", 1) == 0.0
+
+
+def test_payload_and_groups():
+    ops = {o.kind + str(i): o for i, o in
+           enumerate(parse_collectives(HLO, chips_per_pod=256))}
+    ar = [o for o in ops.values() if o.kind == "all-reduce"][0]
+    assert ar.payload_bytes == 16 * 4096 * 2048 * 4
+    assert ar.group_size == 16
+    assert not ar.crosses_pod
+    rs = [o for o in ops.values() if o.kind == "reduce-scatter"][0]
+    assert rs.group_size == 512
+    assert rs.crosses_pod                  # group of 512 spans two 256-pods
+    ag = [o for o in ops.values() if o.kind == "all-gather"][0]
+    assert ag.group_size == 16
+    assert ag.payload_bytes == 256 * 1024 * 2   # result side is the payload
+
+
+def test_promoted_bf16_correction():
+    ops = parse_collectives(HLO, chips_per_pod=256)
+    prom = [o for o in ops if o.payload_bytes == 4 * 4 * 2][0]
+    # f32-promoted on CPU -> charged at half (bf16 on TPU wire)
+    assert prom.wire_bytes == pytest.approx(
+        prom.payload_bytes * _wire_factor("all-reduce", 2) * 0.5)
+
+
+def test_roofline_terms_and_dominance():
+    rep = RooflineReport(
+        flops=197e12, bytes_accessed=819e9 / 2,
+        collectives=[CollectiveOp("all-reduce", 10 * 2**30, 16, False,
+                                  wire_bytes=100e9)])
+    assert rep.compute_s == pytest.approx(1.0)
+    assert rep.memory_s == pytest.approx(0.5)
+    assert rep.collective_s == pytest.approx(100e9 / V5E.ici_link_bw)
+    assert rep.dominant == "collective"
+    assert rep.step_time_s == pytest.approx(rep.collective_s)
+    assert rep.serial_time_s == pytest.approx(
+        rep.compute_s + rep.memory_s + rep.collective_s)
+
+
+def test_dcn_charged_at_dcn_bw():
+    rep = RooflineReport(flops=0, bytes_accessed=0, collectives=[
+        CollectiveOp("all-reduce", 0, 512, True, wire_bytes=25e9)])
+    assert rep.collective_s == pytest.approx(1.0)   # 25 GB at 25 GB/s
+
+
+def test_extrapolate_linear():
+    r1 = RooflineReport(flops=10.0, bytes_accessed=100.0, collectives=[
+        CollectiveOp("all-reduce", 8, 4, False, 4.0)])
+    r2 = RooflineReport(flops=14.0, bytes_accessed=130.0, collectives=[
+        CollectiveOp("all-reduce", 8, 4, False, 4.0),
+        CollectiveOp("all-gather", 16, 4, False, 12.0)])
+    r = r1.extrapolate(r2, repeats=5)
+    assert r.flops == pytest.approx(10 + 4 * 4)
+    assert r.bytes_accessed == pytest.approx(100 + 4 * 30)
+    # body all-gather appears 4 extra times
+    assert len(r.collectives) == 1 + 4
+    assert sum(c.wire_bytes for c in r.collectives) == pytest.approx(
+        4.0 + 4 * 12.0)

@@ -1,0 +1,101 @@
+"""Property tests for the structured design space C (paper §3.1)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.design_space import (BACKENDS, COMPLETIONS, CONSERVATIVE,
+                                     CONTEXTS, DIMENSIONS, EXPERT_SYSTEMS,
+                                     GRANULARITIES, ISSUERS, ORDERINGS,
+                                     PLACEMENTS, SCOPES, Directive,
+                                     enumerate_valid, is_valid,
+                                     random_directive, violations)
+from repro.core.mutation import HeuristicMutator, MutationContext, \
+    parse_directive
+from repro.core.cascade import Candidate, EvalResult
+
+directives = st.builds(
+    Directive,
+    backend=st.sampled_from(BACKENDS),
+    completion=st.sampled_from(COMPLETIONS),
+    placement=st.sampled_from(PLACEMENTS),
+    scope=st.sampled_from(SCOPES),
+    issuer=st.sampled_from(ISSUERS),
+    granularity=st.sampled_from(GRANULARITIES),
+    ordering=st.sampled_from(ORDERINGS),
+    contexts=st.sampled_from(CONTEXTS),
+)
+traits = st.fixed_dictionaries({
+    "has_dcn": st.booleans(),
+    "kernelizable": st.booleans(),
+    "ring_topology": st.booleans(),
+})
+
+
+def test_conservative_is_always_valid():
+    for dcn in (False, True):
+        for ring in (False, True):
+            assert is_valid(CONSERVATIVE, has_dcn=dcn, kernelizable=False,
+                            ring_topology=ring)
+
+
+def test_expert_systems_are_points_in_C():
+    # paper Table 3: DeepEP / FLUX / TokenWeave map onto C. The TPU-adapted
+    # coordinates live in a single ICI domain (the fabric that plays the
+    # role of NVLink/IB); cross-DCN deployments require HYBRID (DESIGN.md).
+    for name, d in EXPERT_SYSTEMS.items():
+        v = violations(d, has_dcn=False, kernelizable=True,
+                       ring_topology=False)
+        assert not v, (name, v)
+
+
+@given(directives, traits)
+@settings(max_examples=200, deadline=None)
+def test_violations_consistent_with_is_valid(d, tr):
+    assert is_valid(d, **tr) == (not violations(d, **tr))
+
+
+@given(st.integers(0, 10_000), traits)
+@settings(max_examples=50, deadline=None)
+def test_random_directive_is_valid(seed, tr):
+    rng = random.Random(seed)
+    d = random_directive(rng, **tr)
+    assert is_valid(d, **tr)
+
+
+@given(st.integers(0, 10_000), traits, st.sampled_from(["explore", "exploit"]))
+@settings(max_examples=100, deadline=None)
+def test_mutator_is_bounded_operator(seed, tr, phase):
+    """The paper's core claim: the mutation operator only emits valid points
+    of C (bounded by the domain, not free-form)."""
+    rng = random.Random(seed)
+    parent = Candidate(directive=random_directive(rng, **tr))
+    parent.result = EvalResult(3, 100.0, 1.0)
+    ctx = MutationContext(parent=parent, phase=phase, traits=tr,
+                          tunable_space={"tile_m": (64, 128, 256)})
+    d, form = HeuristicMutator().propose(ctx, rng)
+    assert is_valid(d, **tr), (d, form)
+
+
+@given(directives)
+@settings(max_examples=100, deadline=None)
+def test_render_parse_roundtrip(d):
+    d2 = parse_directive(d.render(), fallback=CONSERVATIVE)
+    assert d2.as_dict() == {**d.as_dict(), "tunables": {}}
+
+
+def test_enumerate_valid_nonempty_and_bounded():
+    all_valid = list(enumerate_valid(has_dcn=False, kernelizable=True,
+                                     ring_topology=True))
+    assert len(all_valid) > 50
+    total = 1
+    for vals in DIMENSIONS.values():
+        total *= len(vals)
+    assert len(all_valid) < total          # constraints prune the space
+
+
+def test_directive_tunables_immutable_update():
+    d = CONSERVATIVE.with_tunable("tile_m", 64)
+    assert d.tunable("tile_m") == 64
+    assert CONSERVATIVE.tunable("tile_m") is None
+    assert d.with_tunable("tile_m", 128).tunable("tile_m") == 128

@@ -1,0 +1,52 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (single-device
+kernels here; the multi-device remote-DMA kernels are swept in
+test_multidevice.py via subprocess with simulated devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("BH,S,hd", [(1, 128, 64), (4, 256, 64),
+                                     (2, 512, 128), (1, 128, 256),
+                                     (3, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(BH, S, hd, causal, dtype):
+    q, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (BH, S, hd),
+                                 dtype) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("q_block,kv_block", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(q_block, kv_block):
+    q, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (2, 256, 64),
+                                 jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, q_block=q_block,
+                          kv_block=kv_block)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_rejects_misaligned():
+    q = jnp.zeros((1, 100, 64))
+    with pytest.raises(AssertionError):
+        flash_attention(q, q, q)
+
+
+def test_flash_attention_numerics_extreme():
+    """Large logits must not overflow the online softmax."""
+    q = 30.0 * jax.random.normal(KEY, (1, 128, 64), jnp.float32)
+    out = flash_attention(q, q, q, causal=True)
+    assert np.all(np.isfinite(np.asarray(out)))

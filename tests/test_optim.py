@@ -1,0 +1,83 @@
+"""AdamW vs a numpy reference; schedule; clipping; ZeRO spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Rules, zero_spec
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, lr_at
+
+
+def _np_adamw(w, g, m, v, step, cfg, lr):
+    m2 = cfg.b1 * m + (1 - cfg.b1) * g
+    v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m2 / (1 - cfg.b1 ** step)
+    vh = v2 / (1 - cfg.b2 ** step)
+    w2 = w - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+    return w2, m2, v2
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=0, clip_norm=1e9,
+                      weight_decay=0.1)
+    w = np.random.default_rng(0).standard_normal((4, 8)).astype(np.float32)
+    g = np.random.default_rng(1).standard_normal((4, 8)).astype(np.float32)
+    g = g / np.linalg.norm(g) * 0.1          # below clip
+    params = {"w": jnp.asarray(w)}
+    state = init_opt_state(params)
+    new_p, new_s, gnorm = adamw_update(params, {"w": jnp.asarray(g)}, state,
+                                       cfg)
+    lr = float(lr_at(cfg, 1))
+    w_ref, m_ref, v_ref = _np_adamw(w, g, np.zeros_like(w), np.zeros_like(w),
+                                    1, cfg, lr)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), w_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_s["m"]["w"]), m_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_s["v"]["w"]), v_ref, rtol=1e-5)
+
+
+def test_global_norm_clip():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, weight_decay=0.0,
+                      peak_lr=1.0, eps=1e-8)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, gnorm = adamw_update(params, g, init_opt_state(params), cfg)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == pytest.approx(0.0)
+    assert float(lr_at(cfg, 10)) == pytest.approx(1.0, rel=1e-2)
+    assert float(lr_at(cfg, 100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr_at(cfg, 55)) < 1.0
+
+
+def test_bf16_params_keep_f32_master():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = init_opt_state(params)
+    assert state["master"]["w"].dtype == jnp.float32
+    cfg = AdamWConfig(warmup_steps=0)
+    new_p, new_s, _ = adamw_update(params, {"w": jnp.ones((8,), jnp.bfloat16)},
+                                   state, cfg)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert new_s["master"]["w"].dtype == jnp.float32
+
+
+def test_zero_spec_adds_data_axis():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+    rules = Rules.__new__(Rules)
+    rules.mesh = FakeMesh()
+    rules.table = {"zero": ("data",)}
+    rules._dp, rules._tp = ("data",), ("model",)
+    sp = zero_spec(P(None, "model"), (64, 32), rules)
+    assert sp == P("data", "model")
+    # already data-sharded: unchanged
+    sp2 = zero_spec(P("data", None), (64, 32), rules)
+    assert sp2 == P("data", None)
+    # nothing divides: unchanged
+    sp3 = zero_spec(P(None, "model"), (3, 32), rules)
+    assert sp3 == P(None, "model")
