@@ -1,0 +1,5 @@
+from repro.dist.collectives import compressed_psum, hierarchical_psum
+from repro.dist.sharding import Rules, sanitize_specs, zero_spec
+
+__all__ = ["Rules", "sanitize_specs", "zero_spec", "compressed_psum",
+           "hierarchical_psum"]

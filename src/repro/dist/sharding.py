@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (GSPMD-style named-axis tables).
+
+``Rules`` maps *logical* tensor axes ("batch", "heads", "ff", "vocab",
+"experts_data", ...) to *mesh* axes per execution kind (train / prefill /
+decode). Model code never names mesh axes directly: it asks
+``rules.axes("heads")`` for a PartitionSpec entry, ``rules.shard(x, ...)``
+for an activation constraint, or ``rules.param_spec(shape, ...)`` for a
+divisibility-checked parameter spec. Everything here is a sharding *hint*
+(constraints and placements), never a semantic change — the sharded-model
+suites assert numerical equivalence against the unsharded oracle.
+
+Conventions (single pod: ("data", "model"); multi-pod adds a leading
+"pod" axis that behaves as extra data parallelism):
+
+  batch         -> data (+pod)       activations' leading dim
+  heads/kv_heads/ff/vocab -> model   Megatron-style tensor parallelism
+  experts_data  -> data              expert-parallel all-to-all mode
+  experts_model -> model             expert-sharded replicated mode
+  seq_act/seq_res -> model           sequence-parallel activation shards
+  seq_kv        -> model iff long_context (500k-token cells) else unsharded
+  zero          -> (pod, data)       ZeRO-style optimizer-state sharding
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DP_AXIS_NAMES = ("pod", "data")
+TP_AXIS_NAMES = ("model",)
+
+
+def _flatten(entry):
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _compact(axes):
+    """() -> None, 1-tuple -> name, n-tuple -> tuple (PartitionSpec style)."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+class Rules:
+    def __init__(self, mesh, kind: str = "train", *, long_context=False):
+        self.mesh = mesh
+        self.kind = kind
+        self.long_context = long_context
+        names = tuple(mesh.axis_names) if mesh is not None else ()
+        self._dp = tuple(a for a in names if a in DP_AXIS_NAMES)
+        self._tp = tuple(a for a in names if a in TP_AXIS_NAMES)
+        dp, tp = _compact(self._dp), _compact(self._tp)
+        self.table = {
+            "batch": dp,
+            "zero": self._dp,
+            "heads": tp,
+            "kv_heads": tp,
+            "ff": tp,
+            "vocab": tp,
+            "experts_data": dp,
+            "experts_model": tp,
+            "seq_act": tp,
+            "seq_res": tp,
+            "seq_kv": tp if long_context else None,
+        }
+
+    # ------------------------------------------------------------- queries
+    @property
+    def dp_axes(self):
+        return self._dp
+
+    @property
+    def tp_axes(self):
+        return self._tp
+
+    def axes(self, name):
+        """Mesh axes for a logical axis name (None = replicated)."""
+        return self.table.get(name)
+
+    def _axis_size(self, entry):
+        size = 1
+        for a in _flatten(entry):
+            size *= int(self.mesh.shape[a])
+        return size
+
+    def size(self, name):
+        return self._axis_size(self.axes(name))
+
+    def dp_size(self):
+        return self._axis_size(self._dp)
+
+    # ----------------------------------------------------------- builders
+    def _fit(self, entry, dim):
+        """Keep a spec entry only if the dim divides over it evenly."""
+        if entry is None:
+            return None
+        size = self._axis_size(entry)
+        return entry if size and dim % size == 0 else None
+
+    def param_spec(self, shape, *names):
+        """Divisibility-checked PartitionSpec for a concrete shape. Entries
+        are logical axis names or None (replicated dim)."""
+        entries = []
+        for dim, nm in zip(shape, names):
+            ax = self.axes(nm) if isinstance(nm, str) else nm
+            entries.append(self._fit(ax, dim))
+        return P(*entries)
+
+    def shard(self, x, *names):
+        """Activation sharding constraint over logical axis names."""
+        if self.mesh is None:
+            return x
+        spec = self.param_spec(x.shape, *names)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def zero_spec(spec, shape, rules: Rules):
+    """ZeRO-style optimizer-state spec: additionally shard the first
+    replicated, evenly-divisible dim over the data axes. A spec that
+    already uses any data axis is returned unchanged."""
+    dp_axes = tuple(rules.table.get("zero") or rules._dp)
+    if not dp_axes:
+        return spec
+    used = {a for entry in spec for a in _flatten(entry)}
+    if used & set(dp_axes):
+        return spec
+    dp = 1
+    for a in dp_axes:
+        dp *= int(rules.mesh.shape[a])
+    if dp <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None and shape[i] % dp == 0:
+            entries[i] = _compact(dp_axes)
+            return P(*entries)
+    return spec
+
+
+def sanitize_specs(specs, sds, mesh):
+    """Drop spec entries that reference unknown mesh axes or that do not
+    divide the corresponding dim evenly (strict-divisible shardings only —
+    GSPMD would pad, we refuse instead)."""
+    sizes = {a: int(s) for a, s in dict(mesh.shape).items()}
+
+    def fix(spec, s):
+        shape = s.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, e in zip(shape, entries):
+            axes = _flatten(e)
+            size = 1
+            known = all(a in sizes for a in axes)
+            for a in axes:
+                size *= sizes.get(a, 1)
+            out.append(e if axes and known and dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, sds, is_leaf=lambda x: isinstance(x, P))

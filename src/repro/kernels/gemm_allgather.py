@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import (interpret_params, shard_map, sync_copy,
+                          compiler_params as tpu_compiler_params)
 
 
 def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
@@ -30,7 +32,7 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
         a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).astype(ctile.dtype)
     row0 = me * M_l + t * tm
-    pltpu.sync_copy(ctile, o_ref.at[pl.ds(row0, tm)])
+    sync_copy(ctile, o_ref.at[pl.ds(row0, tm)])
 
     def bcast(src_rows, nrows):
         for off in range(1, n_dev):
@@ -38,7 +40,7 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
             pltpu.make_async_remote_copy(
                 src_ref=o_ref.at[pl.ds(src_rows, nrows)],
                 dst_ref=o_ref.at[pl.ds(src_rows, nrows)],
-                send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                send_sem=ssem, recv_sem=rsem, device_id=peer,
                 device_id_type=pltpu.DeviceIdType.MESH).start()
 
     if fused:
@@ -61,23 +63,23 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
                     pltpu.make_async_remote_copy(
                         src_ref=o_ref.at[pl.ds(out_rows, tm)],
                         dst_ref=o_ref.at[pl.ds(out_rows, tm)],
-                        send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                        send_sem=ssem, recv_sem=rsem, device_id=peer,
                         device_id_type=pltpu.DeviceIdType.MESH).wait_send()
                     pltpu.make_async_remote_copy(
                         src_ref=o_ref.at[pl.ds(in_rows, tm)],
                         dst_ref=o_ref.at[pl.ds(in_rows, tm)],
-                        send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                        send_sem=ssem, recv_sem=rsem, device_id=peer,
                         device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
             else:
                 pltpu.make_async_remote_copy(
                     src_ref=o_ref.at[pl.ds(me * M_l, M_l)],
                     dst_ref=o_ref.at[pl.ds(me * M_l, M_l)],
-                    send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                    send_sem=ssem, recv_sem=rsem, device_id=peer,
                     device_id_type=pltpu.DeviceIdType.MESH).wait_send()
                 pltpu.make_async_remote_copy(
                     src_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
                     dst_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
-                    send_sem=ssem, recv_sem=rsem, device_id=(peer,),
+                    send_sem=ssem, recv_sem=rsem, device_id=peer,
                     device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
 
 
@@ -91,7 +93,7 @@ def gemm_allgather_sharded(a, b, *, axis, n_dev, tile_m=128, fused=True,
     assert M_l % tm == 0
     kern = functools.partial(_ga_kernel, axis=axis, n_dev=n_dev, M_l=M_l,
                              tm=tm, fused=fused)
-    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
         grid=(M_l // tm,),
@@ -107,7 +109,7 @@ def gemm_allgather_sharded(a, b, *, axis, n_dev, tile_m=128, fused=True,
             pltpu.SemaphoreType.DMA,
         ],
         interpret=ip,
-        compiler_params=pltpu.CompilerParams(collective_id=11),
+        compiler_params=tpu_compiler_params(collective_id=11),
     )(a, b)
 
 
@@ -116,7 +118,7 @@ def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True):
     from jax.sharding import PartitionSpec as P
     n_dev = mesh.shape[axis]
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(axis), P(None, None)),
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis), P(None, None)),
                        out_specs=P(axis), check_vma=False)
     def run(a, bb):
         out = gemm_allgather_sharded(a[0], bb, axis=axis, n_dev=n_dev,

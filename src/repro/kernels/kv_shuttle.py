@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
+                          compiler_params as tpu_compiler_params)
 
 
 def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
@@ -29,14 +31,13 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
     def kdma():
         return pltpu.make_async_remote_copy(
             src_ref=kbuf, dst_ref=ko_ref, send_sem=ksem, recv_sem=krecv,
-            device_id=(decode_rank,), device_id_type=pltpu.DeviceIdType.MESH)
+            device_id=decode_rank, device_id_type=pltpu.DeviceIdType.MESH)
 
     def vdma():
         return pltpu.make_async_remote_copy(
             src_ref=vbuf, dst_ref=vo_ref, send_sem=vsem, recv_sem=vrecv,
-            device_id=(decode_rank,), device_id_type=pltpu.DeviceIdType.MESH)
+            device_id=decode_rank, device_id_type=pltpu.DeviceIdType.MESH)
 
-    @pl.when(me != decode_rank)
     def _prefill():
         kbuf[...] = jax.lax.dot_general(
             x_ref[...], wk_ref[...], (((1,), (0,)), ((), ())),
@@ -54,10 +55,23 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
             kd.wait_send()
         vd.wait_send()
 
-    @pl.when(me == decode_rank)
     def _decode():
         kdma().wait_recv()
         vdma().wait_recv()
+
+    if LEGACY_INTERPRET:
+        # The legacy interpreter discharges a remote DMA via an all_gather
+        # every rank must reach — role-predicated issue would deadlock. Run
+        # the full chain on BOTH ranks in lockstep: the decode rank's
+        # outgoing copy carries its (zero) projections but the discharge
+        # selects the prefill rank as source for the decode rank, and the
+        # prefill rank's spurious self-delivery is masked by the caller
+        # (outputs are only valid on the decode rank by contract).
+        _prefill()
+        _decode()
+    else:
+        pl.when(me != decode_rank)(_prefill)
+        pl.when(me == decode_rank)(_decode)
 
 
 def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
@@ -68,7 +82,7 @@ def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
     dk = wk.shape[1]
     kern = functools.partial(_shuttle_kernel, axis=axis, chained=chained,
                              decode_rank=decode_rank)
-    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
         in_specs=[
@@ -85,7 +99,7 @@ def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
             pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
         ],
         interpret=ip,
-        compiler_params=pltpu.CompilerParams(collective_id=13),
+        compiler_params=tpu_compiler_params(collective_id=13),
     )(x, wk, wv)
 
 
@@ -95,7 +109,7 @@ def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True):
     — row [1] (decode rank) holds the shuttled projections."""
     from jax.sharding import PartitionSpec as P
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(axis), P(None, None), P(None, None)),
                        out_specs=(P(axis), P(axis)), check_vma=False)
     def run(xs, k, v):

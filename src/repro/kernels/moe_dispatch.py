@@ -1,0 +1,364 @@
+"""Fused device-initiated MoE dispatch/combine — the DeepEP analogue
+(paper §4.3 / Table 3's `PALLAS_RDMA` region of C for the flagship workload).
+
+One Pallas kernel per rank performs the whole MoE step: stage per-expert
+token blocks, remote-DMA each block directly into the owning expert's
+receive slab (``pltpu.make_async_remote_copy`` — the GIN/RDMA-put analogue),
+run the expert FFN per source as its tokens land, and remote-DMA the results
+straight back into each source's combine slab. No host round-trip between
+phases: a single kernel launch replaces the quantize/dispatch/compute/combine
+chain of host-driven builds.
+
+**Tight wire sizes.** Routing here is static per step (``counts`` are trace
+time Python ints, identical on every rank), so each edge ``r -> e`` carries
+exactly ``counts[e]`` tokens — not the padded max-capacity ``C`` block an
+XLA all-to-all would ship. Transfers are quantized into ``block_tokens``-row
+microblocks; expert ``e``'s edges need ``b[e] = ceil(counts[e]/B)`` blocks.
+The analytic (l3) model credits the exact token counts; the executed
+schedule ships the block-rounded ones (see :func:`executed_wire_tokens`).
+
+**Permutation-round schedule.** The legacy pallas interpreter discharges a
+remote DMA only when every rank issues it in lockstep and the edges form a
+permutation (each rank exactly one incoming copy of one static size). The
+trace-time schedule therefore runs rounds ``(off, j)``: in round ``(off,
+j)`` rank ``r`` sends microblock ``j`` of its block for expert ``e = (r -
+off) % n`` — a shift permutation. ``off = 0`` is the self edge (local
+expert's tokens loop back without touching the wire — the self/remote split
+of the STREAM_SPLIT build, here inside the kernel). Ranks whose edge has
+fewer than ``j+1`` real blocks ship a dummy block into the receiver's trash
+row to keep the permutation total; on real TPU hardware (non-interpret)
+those slots are elided since lockstep issue is not required. Dummy blocks
+are accounted separately and never exceed the padded baseline's wire.
+
+**Completion (design-space K):** ``SIGNAL`` waits per-edge DMA receive
+semaphores — expert compute for the earliest-arriving peer starts while
+later peers are still in flight (``TILE_PIPELINED``); ``BARRIER`` drains
+every edge before any compute (DeepEP-NVL's conservative point).
+``contexts`` bounds the in-flight send window (double buffering).
+
+Combine is the exact reverse schedule: rank ``e`` returns ``counts[e]``
+processed tokens to every source, shipped bf16/f32 (DeepSeek-V3 quantizes
+dispatch only; combine stays high precision).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
+                          compiler_params as tpu_compiler_params)
+
+# ----------------------------------------------------------------- schedule
+
+
+def block_counts(counts, block_tokens, tight=True):
+    """Microblocks per edge into each expert. Padded mode ships the
+    max-capacity block count on every edge (the XLA all-to-all shape)."""
+    b = [int(math.ceil(c / block_tokens)) for c in counts]
+    if not tight:
+        b = [max(b)] * len(b)
+    return b
+
+
+@dataclass(frozen=True)
+class DispatchSchedule:
+    """Trace-time routing schedule + its wire accounting (tokens, per rank).
+
+    ``rounds`` is the lockstep permutation-round list ``[(off, j), ...]``:
+    in round ``(off, j)`` rank ``r`` exchanges microblock ``j`` with peer
+    ``(r - off) % n`` (dispatch) / ``(r + off) % n`` (combine).
+    """
+    n: int
+    block_tokens: int
+    counts: tuple          # exact tokens routed to each expert (per rank)
+    blocks: tuple          # microblocks per edge into each expert
+    tight: bool
+
+    @property
+    def b_max(self):
+        return max(self.blocks)
+
+    @property
+    def rounds(self):
+        return [(off, j) for off in range(self.n)
+                for j in range(self.b_max)]
+
+    def wire_tokens(self, rank=0):
+        """Exact off-rank tokens rank ``rank`` dispatches (the l3 credit):
+        tight = sum(counts) - counts[rank]; padded = C * (n - 1)."""
+        if self.tight:
+            return int(sum(self.counts)) - int(self.counts[rank])
+        return int(max(self.counts)) * (self.n - 1)
+
+    def executed_wire_tokens(self, rank=0):
+        """Block-rounded off-rank tokens the kernel actually ships for rank
+        ``rank`` (real microblocks only, dummies excluded)."""
+        return sum(self.blocks[e] * self.block_tokens
+                   for e in range(self.n) if e != rank)
+
+    def dummy_wire_tokens(self, rank=0):
+        """Off-rank dummy (trash-row) tokens the lockstep interpreter path
+        additionally ships for rank ``rank``; elided on real hardware."""
+        return sum((self.b_max - self.blocks[e]) * self.block_tokens
+                   for e in range(self.n) if e != rank)
+
+
+def make_schedule(counts, block_tokens=64, tight=True):
+    counts = tuple(int(c) for c in counts)
+    return DispatchSchedule(
+        n=len(counts), block_tokens=block_tokens, counts=counts,
+        blocks=tuple(block_counts(counts, block_tokens, tight)), tight=tight)
+
+
+# ------------------------------------------------------------------- kernel
+
+
+def quant_i8(x):
+    """int8 wire quantization with per-row scales (shared with the XLA
+    builder in workloads/moe_dispatch.py — keep one copy of the formula)."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s
+
+
+def swiglu_ffn(x, w1, w2):
+    """The expert FFN: GEMM1 (2f, gate+up) -> SwiGLU -> GEMM2."""
+    g, u = jnp.split(x @ w1, 2, axis=-1)
+    return (jax.nn.silu(g) * u) @ w2
+
+
+def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
+                send_q, send_s, recv_q, recv_s, ffn_out, comb,
+                dsend, drecv, qsend, qrecv, csend, crecv,
+                *, axis, sched: DispatchSchedule, offsets, pipelined,
+                barrier, contexts, wire_i8):
+    n, B = sched.n, sched.block_tokens
+    b_max, blocks, counts = sched.b_max, sched.blocks, sched.counts
+    stride = b_max * B                       # slab rows per edge region
+    trash = n * stride                       # trash row block for dummies
+    d_model = x_ref.shape[1]
+    me = jax.lax.axis_index(axis)
+    def _lookup(table, idx):
+        # static-table lookup by traced index without capturing a constant
+        # array (the legacy pallas tracer rejects non-scalar kernel consts)
+        out = jnp.int32(table[0])
+        for k in range(1, n):
+            out = jnp.where(idx == k, jnp.int32(table[k]), out)
+        return out
+
+    # ---- stage: per-expert token blocks, B-quantized regions, wire dtype
+    x = x_ref[...]
+    parts = []
+    for e in range(n):
+        if counts[e] == 0:
+            parts.append(jnp.zeros((stride, d_model), x.dtype))
+            continue
+        blk = jax.lax.dynamic_slice_in_dim(x, offsets[e], counts[e])
+        parts.append(jnp.pad(blk, ((0, stride - counts[e]), (0, 0))))
+    staged = jnp.concatenate(parts)                    # (n*stride, d)
+    if wire_i8:
+        q, s = quant_i8(staged)
+        send_q[...] = q
+        send_s[...] = s
+    else:
+        send_q[...] = staged
+    recv_q[...] = jnp.zeros_like(recv_q)
+    if wire_i8:
+        recv_s[...] = jnp.ones_like(recv_s)
+    comb[...] = jnp.zeros_like(comb)
+
+    # ---- round helpers -------------------------------------------------
+    def _dma(src_slab, dst_slab, ssems, rsems, src_off, dst_off, peer,
+             src_rank, rows):
+        return pltpu.make_async_remote_copy(
+            src_ref=src_slab.at[pl.ds(src_off, rows)],
+            dst_ref=dst_slab.at[pl.ds(dst_off, rows)],
+            send_sem=ssems.at[peer], recv_sem=rsems.at[src_rank],
+            device_id=peer, device_id_type=pltpu.DeviceIdType.MESH)
+
+    # The receive-semaphore slot convention is "slot s = edge from source
+    # rank s". Under faithful sender-driven RDMA (hardware / the modern
+    # InterpretParams simulator) the *sender's* descriptor names the slot
+    # its signal lands in on the receiver -> the issuer's own rank (me).
+    # The legacy lockstep discharge instead increments the slot named by
+    # the *receiver's* own descriptor -> my inbound peer for this round.
+    def _sem_slot(inbound_src):
+        return inbound_src if LEGACY_INTERPRET else me
+
+    def dispatch_round(off, j):
+        """Shift permutation r -> (r - off) % n, microblock j (dispatch)."""
+        e = jax.lax.rem(me - off + n, n)               # my receiver
+        src = jax.lax.rem(me + off, n)                 # my sender
+        real = j < _lookup(blocks, e)
+        src_off = jnp.where(real, e * stride + j * B, 0)
+        dst_off = jnp.where(real, me * stride + j * B, trash)
+        slot = _sem_slot(src)
+        cps = [_dma(send_q, recv_q, dsend, drecv, src_off, dst_off, e,
+                    slot, B)]
+        if wire_i8:
+            cps.append(_dma(send_s, recv_s, qsend, qrecv,
+                            src_off, dst_off, e, slot, B))
+        for cp in cps:
+            cp.start()
+        return cps
+
+    def combine_round(off, j):
+        """Reverse shift r -> (r + off) % n: expert returns tokens."""
+        q = jax.lax.rem(me + off, n)                   # my receiver (source)
+        src = jax.lax.rem(me - off + n, n)             # my sender (expert)
+        real = j < _lookup(blocks, me)                 # I own expert `me`
+        src_off = jnp.where(real, q * stride + j * B, 0)
+        dst_off = jnp.where(real, me * stride + j * B, trash)
+        cp = _dma(ffn_out, comb, csend, crecv, src_off, dst_off, q,
+                  _sem_slot(src), B)
+        cp.start()
+        return [cp]
+
+    def run_rounds(round_fn):
+        """Issue all rounds with a bounded in-flight send window."""
+        inflight = []
+        for off in range(n):
+            for j in range(b_max):
+                if len(inflight) >= max(1, contexts):
+                    for cp in inflight.pop(0):
+                        cp.wait_send()
+                inflight.append(round_fn(off, j))
+        for cps in inflight:
+            for cp in cps:
+                cp.wait_send()
+
+    blk_elems = B * d_model                            # recv-sem units/block
+    scl_elems = B                                      # scale-sem units/block
+
+    def wait_recv_edge(rsems, src, nblocks, elems):
+        pltpu.semaphore_wait(rsems.at[src], nblocks * elems)
+
+    def ffn_region(s_idx):
+        """Expert FFN over source region s_idx's landed tokens."""
+        src = jax.lax.rem(me + s_idx, n)
+        rows = recv_q[pl.ds(src * stride, stride)]
+        if wire_i8:
+            rows = rows.astype(jnp.float32) * recv_s[pl.ds(src * stride,
+                                                           stride)]
+        h = swiglu_ffn(rows.astype(jnp.float32), w1_ref[...], w2_ref[...])
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (stride, 1), 0)
+                 < _lookup(counts, me))
+        ffn_out.at[pl.ds(src * stride, stride)][...] = jnp.where(
+            valid, h, 0.0).astype(ffn_out.dtype)
+
+    # ---- dispatch ------------------------------------------------------
+    run_rounds(dispatch_round)
+
+    if barrier or not pipelined:
+        # BARRIER / DEFERRED: global rendezvous — drain every edge fully
+        # (real + dummy blocks) before any expert compute starts.
+        for s_idx in range(n):
+            src = jax.lax.rem(me + s_idx, n)
+            wait_recv_edge(drecv, src, b_max, blk_elems)
+            if wire_i8:
+                wait_recv_edge(qrecv, src, b_max, scl_elems)
+        for s_idx in range(n):
+            ffn_region(s_idx)
+    else:
+        # SIGNAL + TILE_PIPELINED: consume peers in arrival order — the
+        # self edge (s_idx 0) computes first, hiding later dispatch edges
+        # behind expert compute; each edge waits only its own semaphore,
+        # and its FFN runs immediately, before later edges are fenced.
+        for s_idx in range(n):
+            src = jax.lax.rem(me + s_idx, n)
+            wait_recv_edge(drecv, src, _lookup(blocks, me), blk_elems)
+            if wire_i8:
+                wait_recv_edge(qrecv, src, _lookup(blocks, me), scl_elems)
+            ffn_region(s_idx)
+        # drain the dummy-block residue so every semaphore balances
+        for s_idx in range(n):
+            src = jax.lax.rem(me + s_idx, n)
+            wait_recv_edge(drecv, src, b_max - _lookup(blocks, me), blk_elems)
+            if wire_i8:
+                wait_recv_edge(qrecv, src, b_max - _lookup(blocks, me), scl_elems)
+
+    # ---- combine (reverse path, full precision) ------------------------
+    run_rounds(combine_round)
+    for s_idx in range(n):
+        src = jax.lax.rem(me + s_idx, n)
+        wait_recv_edge(crecv, src, b_max, blk_elems)
+
+    # ---- assemble: region e holds my tokens processed by expert e ------
+    for e in range(n):
+        if counts[e] == 0:
+            continue
+        y_ref.at[pl.ds(offsets[e], counts[e])][...] = \
+            comb[pl.ds(e * stride, counts[e])].astype(y_ref.dtype)
+
+
+def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
+                                 pipelined=True, barrier=False, contexts=2,
+                                 wire_i8=False, interpret=None):
+    """Per-device fn (under shard_map). x: (T, d) local tokens sorted into
+    contiguous per-expert blocks by ``sched.counts``; w1: (d, 2f); w2:
+    (f, d) — this rank's expert. Returns (T, d) combined outputs."""
+    T, d = x.shape
+    n, B, b_max = sched.n, sched.block_tokens, sched.b_max
+    assert sum(sched.counts) == T, (sched.counts, T)
+    offsets = [0] * n
+    for e in range(1, n):
+        offsets[e] = offsets[e - 1] + sched.counts[e - 1]
+    stride = b_max * B
+    slab = n * stride + B                             # + trash block
+    wire_dt = jnp.int8 if wire_i8 else x.dtype
+    kern = functools.partial(
+        _moe_kernel, axis=axis, sched=sched, offsets=offsets,
+        pipelined=pipelined, barrier=barrier, contexts=contexts,
+        wire_i8=wire_i8)
+    ip = interpret if interpret is not None else interpret_params()
+    return pl.pallas_call(
+        kern,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n * stride, d), wire_dt),       # send slab
+            pltpu.VMEM((n * stride, 1), jnp.float32),   # send scales
+            pltpu.VMEM((slab, d), wire_dt),             # recv slab (+trash)
+            pltpu.VMEM((slab, 1), jnp.float32),         # recv scales
+            pltpu.VMEM((n * stride, d), jnp.float32),   # expert FFN out
+            pltpu.VMEM((slab, d), jnp.float32),         # combine slab
+            pltpu.SemaphoreType.DMA((n,)),              # dispatch send
+            pltpu.SemaphoreType.DMA((n,)),              # dispatch recv
+            pltpu.SemaphoreType.DMA((n,)),              # scale send
+            pltpu.SemaphoreType.DMA((n,)),              # scale recv
+            pltpu.SemaphoreType.DMA((n,)),              # combine send
+            pltpu.SemaphoreType.DMA((n,)),              # combine recv
+        ],
+        interpret=ip,
+        compiler_params=tpu_compiler_params(collective_id=17),
+    )(x, w1, w2)
+
+
+def moe_dispatch_combine(x, w1, w2, mesh, *, axis="x", counts,
+                         block_tokens=64, tight=True, pipelined=True,
+                         barrier=False, contexts=2, wire_i8=False):
+    """Global entry. x: (n, T, d) token-sharded over ``axis`` (each rank's
+    rows sorted into contiguous per-expert blocks, identical static
+    ``counts`` on every rank); w1: (n, d, 2f), w2: (n, f, d) — expert e's
+    weights on rank e. Returns (n, T, d): each rank's tokens after
+    dispatch -> expert FFN -> combine."""
+    from jax.sharding import PartitionSpec as P
+    sched = make_schedule(counts, block_tokens, tight)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(axis), P(axis), P(axis)),
+                       out_specs=P(axis), check_vma=False)
+    def run(xs, w1s, w2s):
+        out = moe_dispatch_combine_sharded(
+            xs[0], w1s[0], w2s[0], axis=axis, sched=sched,
+            pipelined=pipelined, barrier=barrier, contexts=contexts,
+            wire_i8=wire_i8)
+        return out[None]
+
+    return run(x, w1, w2)

@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import (interpret_params, remote_semaphore_signal,
+                          shard_map, sync_copy,
+                          compiler_params as tpu_compiler_params)
 
 NEG_INF = -1e30
 
@@ -49,17 +52,17 @@ def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
     @pl.when((r == 0) & (bh == 0))
     def _load_local():
         # round 0 uses the local KV shard: copy HBM -> VMEM slot 0
-        pltpu.sync_copy(k_ref, kbuf.at[0])
-        pltpu.sync_copy(v_ref, vbuf.at[0])
+        sync_copy(k_ref, kbuf.at[0])
+        sync_copy(v_ref, vbuf.at[0])
 
     def _descs(slot_src, slot_dst):
         kd = pltpu.make_async_remote_copy(
             src_ref=kbuf.at[slot_src], dst_ref=kbuf.at[slot_dst],
-            send_sem=ksend, recv_sem=krecv, device_id=(nxt,),
+            send_sem=ksend, recv_sem=krecv, device_id=nxt,
             device_id_type=pltpu.DeviceIdType.MESH)
         vd = pltpu.make_async_remote_copy(
             src_ref=vbuf.at[slot_src], dst_ref=vbuf.at[slot_dst],
-            send_sem=vsend, recv_sem=vrecv, device_id=(nxt,),
+            send_sem=vsend, recv_sem=vrecv, device_id=nxt,
             device_id_type=pltpu.DeviceIdType.MESH)
         return kd, vd
 
@@ -73,19 +76,24 @@ def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
         kd.wait()
         vd.wait()
 
-    if pipelined:
-        # TILE_PIPELINED: start rotating the current slot while computing on
-        # it (both reads); recv for r+1 was awaited at the top of this round.
-        # Backpressure: round r's send writes the neighbour slot its round
-        # r-1 compute read — wait for the neighbour's free-slot credit first.
-        @pl.when((bh == 0) & (r < n_dev - 1))
-        def _rotate():
-            @pl.when(r >= 1)
-            def _backpressure():
-                pltpu.semaphore_wait(credit, 1)
-            _send(cur, jax.lax.rem(r + 1, 2))
-            if eager_wait:
-                _wait(cur, jax.lax.rem(r + 1, 2))
+    # Rotation is always issued at the top of the round. TILE_PIPELINED
+    # defers the recv fence to the end of the round so the transfer overlaps
+    # this round's attention compute; DEFERRED (and eager orderings) wait
+    # immediately — zero overlap, comm strictly between compute rounds, the
+    # host-driven sequential shape. (Issuing the send *after* the compute
+    # block instead trips an XLA:CPU reshape bug on the legacy-interpreter
+    # lowering path, and is behaviourally identical for the zero-overlap
+    # realizations.)
+    # Backpressure: round r's send writes the neighbour slot its round
+    # r-1 compute read — wait for the neighbour's free-slot credit first.
+    @pl.when((bh == 0) & (r < n_dev - 1))
+    def _rotate():
+        @pl.when(r >= 1)
+        def _backpressure():
+            pltpu.semaphore_wait(credit, 1)
+        _send(cur, jax.lax.rem(r + 1, 2))
+        if eager_wait or not pipelined:
+            _wait(cur, jax.lax.rem(r + 1, 2))
 
     # ---- compute this round's attention tile (flash accumulate) ----
     @pl.when(r == 0)
@@ -113,20 +121,10 @@ def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_i[bh] = m_new
 
-    if pipelined:
-        if not eager_wait:
-            # lazy ordering: block round r+1 until the rotated KV landed
-            @pl.when((bh == n_bh - 1) & (r < n_dev - 1))
-            def _fence():
-                _wait(cur, jax.lax.rem(r + 1, 2))
-    else:
-        # DEFERRED: rotate only after the whole round's compute is done
+    if pipelined and not eager_wait:
+        # lazy ordering: block round r+1 until the rotated KV landed
         @pl.when((bh == n_bh - 1) & (r < n_dev - 1))
-        def _rotate_seq():
-            @pl.when(r >= 1)
-            def _backpressure():
-                pltpu.semaphore_wait(credit, 1)
-            _send(cur, jax.lax.rem(r + 1, 2))
+        def _fence():
             _wait(cur, jax.lax.rem(r + 1, 2))
 
     # Compute on slot r%2 is done AND our outgoing DMA reading it has been
@@ -135,8 +133,8 @@ def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
     # wait_send would let upstream overwrite a slot our DMA is still reading.
     @pl.when((bh == n_bh - 1) & (r <= n_dev - 3))
     def _ack_upstream():
-        pltpu.semaphore_signal(credit, 1, device_id=(prv,),
-                               device_id_type=pltpu.DeviceIdType.MESH)
+        remote_semaphore_signal(credit, 1, device_id=prv,
+                                device_id_type=pltpu.DeviceIdType.MESH)
 
     @pl.when(r == n_dev - 1)
     def _finish():
@@ -152,7 +150,7 @@ def ring_attention_sharded(q, k, v, *, axis, n_dev, causal=True,
     kern = functools.partial(_ring_kernel, axis=axis, causal=causal,
                              scale=scale, pipelined=pipelined,
                              eager_wait=eager_wait, n_dev=n_dev)
-    ip = interpret if interpret is not None else pltpu.InterpretParams()
+    ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
         grid=(n_dev, BH),
@@ -176,7 +174,7 @@ def ring_attention_sharded(q, k, v, *, axis, n_dev, causal=True,
             pltpu.SemaphoreType.REGULAR,             # free-slot credit
         ],
         interpret=ip,
-        compiler_params=pltpu.CompilerParams(collective_id=7),
+        compiler_params=tpu_compiler_params(collective_id=7),
     )(q, k, v)
 
 
@@ -186,7 +184,7 @@ def ring_attention(q, k, v, mesh, *, axis="x", causal=True, pipelined=True,
     from jax.sharding import PartitionSpec as P
     n_dev = mesh.shape[axis]
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(axis),
                        out_specs=P(axis), check_vma=False)
     def run(qs, ks, vs):
         out = ring_attention_sharded(qs[0], ks[0], vs[0], axis=axis,

@@ -7,7 +7,8 @@ multi-pod mesh adds a leading 'pod' axis over DCN (2 pods = 512 chips).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,11 +22,9 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"production mesh needs {n} devices, found {len(devs)} — run via "
             f"repro.launch.dryrun (sets xla_force_host_platform_device_count)")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs[:n])
+    return _make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_mesh(shape, axes):
     """Generic helper for tests/examples (small meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

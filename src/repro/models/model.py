@@ -23,6 +23,7 @@ from repro.models.transformer import (attn_block_apply, attn_block_init,
 from repro.models.xlstm import (mlstm_apply, mlstm_init, mlstm_init_state,
                                 mlstm_state_shape, slstm_apply, slstm_init,
                                 slstm_init_state, slstm_state_shape)
+from repro.compat import shard_map
 
 F32 = jnp.float32
 MAX_LEARNED_POS = 32768
@@ -198,7 +199,7 @@ def embed_lookup(embed, ids, rules):
         out = emb_l[jnp.clip(loc, 0, Vl - 1)] * ok[..., None].astype(emb_l.dtype)
         return jax.lax.psum(out, tp)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=rules.mesh,
         in_specs=(P(tp, None), P(bspec, None)),
         out_specs=P(bspec, None, None), check_vma=False,

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import dense_init
+from repro.compat import axis_size, shard_map
 
 F32 = jnp.float32
 
@@ -104,7 +105,7 @@ def _quantize_i8(x):
     return q, scale
 
 
-# ------------------------------------------------------------------執行 paths
+# ----------------------------------------------------------- execution paths
 
 def _local_moe(x, p, cfg):
     """Single-device path (also the oracle for the sharded paths)."""
@@ -174,7 +175,7 @@ def _alltoall_body(x, router, wg, wu, wd, shared, *, cfg, dp_axes, tp_axes,
     k, E_pad = cfg.experts_per_token, cfg.num_experts_padded
     ep = 1
     for a in dp_axes:
-        ep *= jax.lax.axis_size(a)
+        ep *= axis_size(a)
     E_l = E_pad // ep
     C = _capacity(T, k, cfg.num_experts, cfg.capacity_factor)
     gates, idx = _route(x2, router, cfg)
@@ -304,6 +305,6 @@ def moe_apply(params, x, cfg, rules, *, overlap=False, quantize=False):
 
     if shared is None:
         in_specs = in_specs[:-1] + (None,)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=x_spec,
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=x_spec,
                        check_vma=False)
     return fn(x, params["router"], params["wg"], params["wu"], params["wd"], shared)

@@ -23,6 +23,7 @@ from repro.kernels.gemm_allgather import gemm_allgather as ga_kernel
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
+from repro.compat import shard_map
 
 
 @register
@@ -54,7 +55,7 @@ class GemmAllGather(Workload):
     def host_baseline(self, mesh):
         axis = self.axis
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P(axis), P(None, None)),
                            out_specs=P(axis), check_vma=False)
         def run(a, b):
@@ -66,7 +67,7 @@ class GemmAllGather(Workload):
     def _stream_split(self, mesh, chunks):
         axis = self.axis
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P(axis), P(None, None)),
                            out_specs=P(axis), check_vma=False)
         def run(a, b):

@@ -22,6 +22,7 @@ from repro.core.design_space import Directive
 from repro.kernels.kv_shuttle import kv_shuttle as shuttle_kernel
 from repro.workloads.base import (KERNEL_LAUNCH, SIGNAL_OVERHEAD,
                                   BARRIER_OVERHEAD, Workload, register)
+from repro.compat import shard_map
 
 
 @register
@@ -56,7 +57,7 @@ class KVTransfer(Workload):
     def host_baseline(self, mesh):
         axis = self.axis
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P(axis), P(None, None), P(None, None)),
                            out_specs=(P(axis), P(axis)), check_vma=False)
         def run(x, wk, wv):
@@ -76,7 +77,7 @@ class KVTransfer(Workload):
     def _stream_split(self, mesh):
         axis = self.axis
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P(axis), P(None, None), P(None, None)),
                            out_specs=(P(axis), P(axis)), check_vma=False)
         def run(x, wk, wv):

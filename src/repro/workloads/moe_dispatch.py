@@ -17,11 +17,21 @@ int8 wire quantization is the paper's FP8-quantize phase, adapted.
 
 Variable-size per-peer transfers (G=PER_PEER, `tight`): XLA's static-shape
 collectives cannot express them on CPU (`ragged-all-to-all` is unimplemented
-by the CPU thunk emitter) — the executable l2 path uses the padded
+by the CPU thunk emitter) — the XLA-backend l2 path uses the padded
 equivalent, while the l3 cost model credits the exact-size wire volume; on
 real TPU the same builder switches to ``jax.lax.ragged_all_to_all``. This
 mirrors the paper's own observation that host-level compilers cannot express
 what the expert libraries do.
+
+PALLAS_RDMA / HYBRID backends route to the fused device-initiated kernel
+(repro.kernels.moe_dispatch — the DeepEP analogue): per-expert token blocks
+remote-DMA'd directly into peer receive slabs at **tight per-peer sizes**
+(`counts[e]` tokens per edge, not the padded max-capacity `C`), per-edge
+SIGNAL completion semaphores, `contexts`-deep send windows, and the expert
+GEMM for the earliest-arriving peer starting while later peers are in
+flight (TILE_PIPELINED). A single kernel launch covers the whole
+quantize/dispatch/compute/combine chain. This unlocks the Table-3
+expert-system region of C (DeepEP NVL/IB, FLUX) for the flagship workload.
 """
 from __future__ import annotations
 
@@ -35,19 +45,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.design_space import Directive
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
-                                  SIGNAL_OVERHEAD, Workload, register)
-
-
-def _quant_i8(x):
-    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
-    return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s
+                                  SIGNAL_OVERHEAD, TILE_SYNC, Workload,
+                                  register)
+from repro.compat import shard_map
+from repro.kernels.moe_dispatch import quant_i8, swiglu_ffn
 
 
 @register
 class MoEDispatch(Workload):
     name = "moe_dispatch"
     ring_topology = False
-    kernelizable = False          # the paper's MoE win is schedule-level
+    kernelizable = True           # repro.kernels.moe_dispatch (DeepEP-style)
 
     def __init__(self, n_dev=4, tokens_per_rank=4096, d=512, f=1024,
                  skew=3.0, axis="x"):
@@ -82,8 +90,7 @@ class MoEDispatch(Workload):
         return x, w1, w2
 
     def _ffn(self, x, w1, w2):
-        g, u = jnp.split(x @ w1, 2, axis=-1)
-        return (jax.nn.silu(g) * u) @ w2
+        return swiglu_ffn(x, w1, w2)
 
     def reference(self, x, w1, w2):
         n, T, d = x.shape
@@ -101,7 +108,7 @@ class MoEDispatch(Workload):
     def _make(self, mesh, *, overlap, wire_i8):
         axis, n = self.axis, self.n_dev
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P(axis), P(axis), P(axis)),
                            out_specs=P(axis), check_vma=False)
         def run(x, w1, w2):
@@ -122,7 +129,7 @@ class MoEDispatch(Workload):
 
             def wire(t):
                 if wire_i8:
-                    q, s = _quant_i8(t)
+                    q, s = quant_i8(t)
                     return (jax.lax.all_to_all(q, axis, 0, 0, tiled=True)
                             .astype(jnp.float32)
                             * jax.lax.all_to_all(s, axis, 0, 0, tiled=True))
@@ -160,12 +167,32 @@ class MoEDispatch(Workload):
     def host_baseline(self, mesh):
         return self._make(mesh, overlap=False, wire_i8=False)
 
+    def _make_kernel(self, mesh, d: Directive):
+        from repro.kernels.moe_dispatch import moe_dispatch_combine
+        B = int(d.tunable("block_tokens", 64))
+        tight = d.granularity == "PER_PEER" and bool(d.tunable("tight", 1))
+        pipelined = d.placement in ("TILE_FUSED", "TILE_PIPELINED",
+                                    "STREAM_SPLIT")
+        barrier = d.completion == "BARRIER"
+
+        def run(x, w1, w2):
+            return moe_dispatch_combine(
+                x, w1, w2, mesh, axis=self.axis,
+                counts=self._counts(x.shape[1]), block_tokens=B,
+                tight=tight, pipelined=pipelined, barrier=barrier,
+                contexts=int(d.contexts),
+                wire_i8=bool(d.tunable("wire_i8", 0)))
+
+        return run
+
     def build(self, d: Directive, mesh):
+        if d.backend in ("PALLAS_RDMA", "HYBRID"):
+            return self._make_kernel(mesh, d)
         return self._make(mesh, overlap=(d.placement == "STREAM_SPLIT"),
                           wire_i8=bool(d.tunable("wire_i8", 0)))
 
     def default_tunables(self):
-        return {"tight": 1, "wire_i8": 0}
+        return {"tight": 1, "wire_i8": 0, "block_tokens": 64}
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
@@ -182,10 +209,35 @@ class MoEDispatch(Workload):
         t_comp = flops / hw.chip.peak_bf16_flops
         t_self = t_comp * self_tokens / max(1, recv_tokens)
         t_remote = t_comp - t_self
+        # tight wire: exactly the off-rank tokens (counts.sum() - counts[0]);
+        # padded wire: the max-capacity block to every peer (C * (n - 1))
         sent = (counts.sum() - counts[0]) if tight else C * (n - 1)
         t_disp = sent * dm * bytes_per / hw.chip.ici_link_bw
         t_comb = sent * dm * 2 / hw.chip.ici_link_bw  # combine in bf16
         t_quant = (2 * T * dm * 2 / hw.chip.hbm_bw) if wire_i8 else 0.0
+
+        if d.backend in ("PALLAS_RDMA", "HYBRID"):
+            # fused device-initiated kernel: one launch for the whole
+            # quantize/dispatch/compute/combine chain; per-edge signal
+            # semaphores instead of a global barrier; per-round DMA
+            # issue/check overhead for the permutation schedule.
+            B = max(1, int(d.tunable("block_tokens", 64)))
+            rounds = 2 * n * math.ceil(C / B)        # dispatch + combine
+            sync = BARRIER_OVERHEAD if d.completion == "BARRIER" \
+                else SIGNAL_OVERHEAD * max(1, n - 1)
+            fixed = t_quant + sync + KERNEL_LAUNCH + rounds * TILE_SYNC
+            pipelined = (d.placement in ("TILE_FUSED", "TILE_PIPELINED",
+                                         "STREAM_SPLIT")
+                         and d.completion != "BARRIER" and d.contexts >= 2)
+            if pipelined:
+                # self-edge compute hides dispatch; per-peer compute hides
+                # later arrivals; combine of peer p hides behind compute of
+                # p+1 — only the last peer's chunks stay exposed.
+                peers = max(1, n - 1)
+                span = max(t_disp, t_self + t_remote * (peers - 1) / peers)
+                return span + t_remote / peers + t_comb / peers + fixed
+            return t_disp + t_comp + t_comb + fixed
+
         sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
         launches = KERNEL_LAUNCH * 4                  # quant/disp/comp/comb
         if d.placement == "STREAM_SPLIT":

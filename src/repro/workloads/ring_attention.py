@@ -28,6 +28,7 @@ from repro.kernels.ring_attention import ring_attention as ring_kernel
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
+from repro.compat import shard_map
 
 
 @register
@@ -58,7 +59,7 @@ class RingAttention(Workload):
         """Sequential rounds with an XLA collective-permute between them."""
         axis, n = self.axis, self.n_dev
 
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+        @functools.partial(shard_map, mesh=mesh, in_specs=P(axis),
                            out_specs=P(axis), check_vma=False)
         def run(q, k, v):
             q, k, v = q[0], k[0], v[0]
@@ -98,7 +99,7 @@ class RingAttention(Workload):
         round r's compute and carries no dependence on it."""
         axis, n = self.axis, self.n_dev
 
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+        @functools.partial(shard_map, mesh=mesh, in_specs=P(axis),
                            out_specs=P(axis), check_vma=False)
         def run(q, k, v):
             q, k, v = q[0], k[0], v[0]

@@ -8,31 +8,32 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist.collectives import compressed_psum, hierarchical_psum
 from repro.launch.mesh import make_mesh
+from repro.compat import shard_map
 
 mesh = make_mesh((2, 4), ("pod", "data"))
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (8, 16, 128), jnp.float32)
 
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+@functools.partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
                    out_specs=P(("pod", "data")), check_vma=False)
 def ref_sum(xs):
     return jax.lax.psum(xs, ("pod", "data"))
 
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+@functools.partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
                    out_specs=P(("pod", "data")), check_vma=False)
 def comp_sum(xs):
     return compressed_psum(xs, ("pod", "data"), group_size=8)
 
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+@functools.partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
                    out_specs=P(("pod", "data")), check_vma=False)
 def hier_sum(xs):
     return hierarchical_psum(xs[0], pod_axis="pod", inner_axes=("data",))[None]
 
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")),
+@functools.partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")),
                    out_specs=P(("pod", "data")), check_vma=False)
 def hier_comp(xs):
     return hierarchical_psum(xs[0], pod_axis="pod", inner_axes=("data",),

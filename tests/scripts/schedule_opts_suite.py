@@ -8,6 +8,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch, reduced
 from repro.dist.sharding import Rules, sanitize_specs
+from repro.compat import set_mesh
 from repro.launch.mesh import make_mesh
 from repro.models import (StepOptions, init_params, param_specs,
                           prefill_step, train_loss)
@@ -25,7 +26,7 @@ for arch in ("recurrentgemma-9b", "llama3.2-1b"):
 
     rules_t = Rules(mesh, "train")
     specs = sanitize_specs(param_specs(cfg, rules_t), shapes, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pl_ = jax.device_put(params, jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda s: isinstance(s, P)))

@@ -9,6 +9,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch, reduced
 from repro.dist.sharding import Rules, sanitize_specs
+from repro.compat import set_mesh
 from repro.launch.mesh import make_mesh
 from repro.models import (decode_step, init_params, param_specs,
                           prefill_step, train_loss)
@@ -38,7 +39,7 @@ for name in ["llama3.2-1b", "xlstm-350m", "recurrentgemma-9b",
     rules_d = Rules(mesh, "decode")
     shapes = jax.eval_shape(lambda k: init_params(k, cfg), key)
     specs = sanitize_specs(param_specs(cfg, rules_t), shapes, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pl_ = jax.device_put(params, jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda s: isinstance(s, P)))
@@ -62,7 +63,7 @@ x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfgm.d_model),
                       jnp.float32)
 y_ref = moe_apply(p, x, cfgm, None)
 rules = Rules(mesh, "train")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for mode in ("replicated", "alltoall"):
         cm = dataclasses.replace(cfgm, ep_mode=mode)
         for ov in (False, True):

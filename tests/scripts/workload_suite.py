@@ -46,6 +46,14 @@ check("moe_dispatch", mesh4, [
     D("XLA_COLLECTIVE", placement="STREAM_SPLIT"),
     D("XLA_COLLECTIVE", placement="DEFERRED"),
     D("XLA_COLLECTIVE", placement="STREAM_SPLIT").with_tunable("wire_i8", 1),
+    # device-initiated kernel (DeepEP analogue): Table-3 NVL point, the
+    # pipelined tight-dispatch refinement, and its int8-wire variant
+    D("PALLAS_RDMA", "BARRIER", "DEFERRED", "LOCAL", "KERNEL",
+      "PER_PEER", "RELEASE", 1),
+    D("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", "LOCAL", "GRID_STEP",
+      "PER_PEER", "ACQUIRE", 2),
+    D("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", "LOCAL", "GRID_STEP",
+      "PER_PEER", "ACQUIRE", 2).with_tunable("wire_i8", 1),
 ], n_dev=4, tokens_per_rank=256, d=128, f=256, skew=3.0)
 
 for skew in (2.0, 5.0):

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")       # optional test dep: skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.train.checkpoint import (latest_step, restore_checkpoint,

@@ -1,5 +1,8 @@
 """Data pipeline: determinism, host sharding, label shift, structure."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")       # optional test dep: skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.data import DataConfig, SyntheticTokenPipeline

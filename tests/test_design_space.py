@@ -2,6 +2,11 @@
 import random
 
 import pytest
+
+# property tests need hypothesis (optional test dep): skip, not error.
+# The non-hypothesis design-space tests live in test_expert_points.py so
+# they still run when hypothesis is absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.design_space import (BACKENDS, COMPLETIONS, CONSERVATIVE,

@@ -40,6 +40,11 @@ def test_workload_directives_verify():
     assert "ALL OK" in out
 
 
+def test_moe_dispatch_deepep_kernel():
+    out = run_script("moe_dispatch_suite.py")
+    assert "ALL OK" in out
+
+
 def test_sharded_model_equivalence():
     out = run_script("sharded_model_suite.py", devices=8)
     assert "ALL OK" in out
