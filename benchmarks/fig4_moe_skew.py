@@ -1,12 +1,18 @@
 """Paper Figure 4: DeepSeek-V3 MoE layer across expert skew (2:1..5:1) —
 sequential host flow vs CUCo self/remote split (+ int8 wire) vs the
-device-initiated Pallas dispatch/combine kernel (the DeepEP point of C,
-tight per-peer wire sizes + per-edge signal + pipelined peer compute)."""
-from repro.core import Directive, extract_hardware_context
+device-initiated Pallas dispatch/combine kernel. Kernelized rows cover both
+realized expert points: DeepEP (tight per-peer wire, per-edge signal,
+pipelined peer compute) and FLUX (tile-fused expert GEMM with per-tile
+combine writes, COUNTER completion).
+
+Run directly for the CLI: ``python -m benchmarks.fig4_moe_skew --n-dev 8``
+sweeps the 8-expert shape (default 2, the paper shape; n_dev=8 is for when
+the interpret-mode runtime budget allows the matching executable suite)."""
+from repro.core import EXPERT_SYSTEMS, Directive, extract_hardware_context
 from repro.workloads import get_workload
 
 
-def run(mesh=None):
+def run(mesh=None, n_dev=2):
     from repro.launch.mesh import make_mesh
     hw = extract_hardware_context(mesh or make_mesh((1,), ("x",)))
     rows = []
@@ -27,8 +33,12 @@ def run(mesh=None):
     # ablation: same kernel forced onto padded max-capacity blocks
     deepep_padded = Directive("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED",
                               "LOCAL", "GRID_STEP", "PER_CHUNK", "ACQUIRE", 2)
+    # Table-3 FLUX coordinates: tile-fused expert GEMM, per-tile combine
+    # writes, COUNTER completion — plus a slow-path-refined variant
+    flux = EXPERT_SYSTEMS["FLUX"]
+    flux_tuned = flux.with_tunable("block_tokens", 128)
     for skew in (2.0, 3.0, 4.0, 5.0):
-        w = get_workload("moe_dispatch", n_dev=2, tokens_per_rank=4096,
+        w = get_workload("moe_dispatch", n_dev=n_dev, tokens_per_rank=4096,
                          d=7168, f=2048, skew=skew)
         th = w.analytic_cost(host, hw) * 1e3
         tc = w.analytic_cost(cuco, hw) * 1e3
@@ -36,6 +46,8 @@ def run(mesh=None):
         tn = w.analytic_cost(deepep_nvl, hw) * 1e3
         tp = w.analytic_cost(deepep_pipe, hw) * 1e3
         tpad = w.analytic_cost(deepep_padded, hw) * 1e3
+        tf = w.analytic_cost(flux, hw) * 1e3
+        tft = w.analytic_cost(flux_tuned, hw) * 1e3
         counts = w._counts(w.T)
         tight_tok = int(counts.sum() - counts[0])
         padded_tok = int(counts.max()) * (w.n_dev - 1)
@@ -52,4 +64,20 @@ def run(mesh=None):
                      f"{padded_tok / max(1, tight_tok):.2f}x)"))
         rows.append((f"fig4/moe_skew{skew:.0f}_deepep_padded", tpad * 1e3,
                      f"speedup={th / tpad:.3f}x"))
+        rows.append((f"fig4/moe_skew{skew:.0f}_flux", tf * 1e3,
+                     f"speedup={th / tf:.3f}x tile-fused combine"))
+        rows.append((f"fig4/moe_skew{skew:.0f}_flux_tuned", tft * 1e3,
+                     f"speedup={th / tft:.3f}x block_tokens=128"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-dev", type=int, default=2,
+                    help="expert/rank count for the sweep (paper shape: 2)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(n_dev=args.n_dev):
+        print(f"{name},{us:.3f},{derived}")

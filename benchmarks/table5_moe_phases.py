@@ -2,7 +2,8 @@
 sequential flow vs CUCo two-stream split vs the device-initiated Pallas
 kernel (DeepEP point: tight wire, one fused launch, per-edge signals).
 Phases: quantize / dispatch / compute / combine."""
-from repro.core import Directive, extract_hardware_context
+from repro.core import (EXPERT_SYSTEMS, Directive,
+                        extract_hardware_context)
 from repro.workloads import get_workload
 from repro.workloads.base import KERNEL_LAUNCH
 
@@ -36,6 +37,9 @@ def run(mesh=None):
                        "GRID_STEP", "PER_PEER", "ACQUIRE", 2,
                        tunables=(("tight", 1), ("wire_i8", 1)))
     deepep_total = w.analytic_cost(deepep, hw) * 1e6
+    # FLUX point: tile-fused expert GEMM, per-tile combine, int8 wire
+    flux = EXPERT_SYSTEMS["FLUX"].with_tunable("wire_i8", 1)
+    flux_total = w.analytic_cost(flux, hw) * 1e6
     rows = [
         ("table5/quantize_ms", t_quant * 1e3, ""),
         ("table5/dispatch_ms", t_disp * 1e3, "hidden behind self-compute "
@@ -53,5 +57,8 @@ def run(mesh=None):
         ("table5/deepep_kernel_total_ms", deepep_total,
          f"delta={(seq_total - deepep_total / 1e3) / seq_total * 100:.1f}% "
          "vs sequential (tight wire + 1 launch + signal)"),
+        ("table5/flux_kernel_total_ms", flux_total,
+         f"delta={(seq_total - flux_total / 1e3) / seq_total * 100:.1f}% "
+         "vs sequential (tile-fused GEMM + per-tile combine)"),
     ]
     return rows

@@ -7,12 +7,13 @@ with cascade evaluation, MAP-Elites archive, candidate DB + novelty filter,
 meta-summarizer, and the v5e roofline cost model.
 """
 from repro.core.design_space import (Directive, CONSERVATIVE, DIMENSIONS,
-                                     EXPERT_SYSTEMS, violations, is_valid,
-                                     random_directive, enumerate_valid)
+                                     EXPERT_SYSTEMS, TUNABLES, violations,
+                                     is_valid, random_directive,
+                                     enumerate_valid)
 from repro.core.hardware import V5E, ChipSpec, HardwareContext, \
     extract_hardware_context
 from repro.core.cost_model import (RooflineReport, parse_collectives,
-                                   roofline_from_compiled)
+                                   per_tile_exposed_s, roofline_from_compiled)
 from repro.core.comm_graph import analyze as analyze_comm_graph
 from repro.core.cascade import Candidate, CascadeEvaluator, EvalResult
 from repro.core.database import CandidateDB, embed_code
@@ -24,10 +25,11 @@ from repro.core.fast_path import fast_path, VerifiedSeed, DEVICE_CONSERVATIVE
 from repro.core.slow_path import (SlowPathConfig, SearchResult, slow_path)
 
 __all__ = [
-    "Directive", "CONSERVATIVE", "DIMENSIONS", "EXPERT_SYSTEMS",
+    "Directive", "CONSERVATIVE", "DIMENSIONS", "EXPERT_SYSTEMS", "TUNABLES",
     "violations", "is_valid", "random_directive", "enumerate_valid",
     "V5E", "ChipSpec", "HardwareContext", "extract_hardware_context",
-    "RooflineReport", "parse_collectives", "roofline_from_compiled",
+    "RooflineReport", "parse_collectives", "per_tile_exposed_s",
+    "roofline_from_compiled",
     "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",
     "CandidateDB", "embed_code", "MapElitesArchive", "HeuristicMutator",
     "LLMMutator", "MutationContext", "parse_directive", "MetaSummarizer",

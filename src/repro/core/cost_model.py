@@ -80,6 +80,15 @@ class CollectiveOp:
                 f"wire={self.wire_bytes/2**20:9.2f} MiB")
 
 
+def per_tile_exposed_s(wire_bytes, link_bw, tiles) -> float:
+    """Per-tile fused-communication credit (the FLUX/CoCoNet TILE_FUSED
+    point): when a transfer is issued per output tile from inside the
+    compute loop, tile t's wire time hides behind the compute of tile t+1
+    and only the final tile's transfer stays exposed on the critical path.
+    """
+    return wire_bytes / link_bw / max(1, int(tiles))
+
+
 def _wire_factor(kind: str, n: int) -> float:
     if n <= 1:
         return 0.0

@@ -58,6 +58,20 @@ ORDERINGS = ("RELAXED", "ACQUIRE", "RELEASE", "ACQREL")
 CONTEXTS = (1, 2, 4)
 # number of in-flight communication buffers (double/quad buffering depth)
 
+# ------------------------------------------------- numeric tunable space
+# Central candidate grids for the slow path's diff-patch (exploit) mutation
+# form: these refine *within* a behavior cell of the archive. Workloads
+# whose default_tunables() name one of these knobs get the grid below;
+# ``contexts`` mirrors the directive dimension so a fine-grained diff can
+# retune the send-window depth without a placement move.
+TUNABLES = {
+    "block_tokens": (16, 32, 64, 128, 256),   # microblock rows per DMA round
+    "combine_tile": (8, 16, 32, 64, 128),     # fused-combine GEMM tile rows
+    "contexts": CONTEXTS,                     # in-flight send window depth
+    "tight": (0, 1),                          # exact vs padded wire sizes
+    "wire_i8": (0, 1),                        # int8 dispatch wire
+}
+
 DIMENSIONS = {
     "backend": BACKENDS,
     "completion": COMPLETIONS,
@@ -204,7 +218,9 @@ EXPERT_SYSTEMS = {
                               "KERNEL", "PER_PEER", "RELEASE", 1),
     "DeepEP (IB)": Directive("PALLAS_RDMA", "SIGNAL", "DEFERRED", "WORLD",
                              "KERNEL", "PER_PEER", "ACQUIRE", 1),
-    "FLUX": Directive("PALLAS_RDMA", "BARRIER", "TILE_FUSED", "LOCAL",
+    # FLUX / CoCoNet point: the GEMM tile loop fused with per-tile
+    # communication — COUNTER readiness ticks per output tile
+    "FLUX": Directive("PALLAS_RDMA", "COUNTER", "TILE_FUSED", "LOCAL",
                       "GRID_STEP", "PER_TILE", "ACQREL", 1),
     "TokenWeave": Directive("XLA_COLLECTIVE", "BARRIER", "STREAM_SPLIT",
                             "LOCAL", "KERNEL", "PER_CHUNK", "RELEASE", 2),

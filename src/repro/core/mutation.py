@@ -138,10 +138,9 @@ class HeuristicMutator(MutationOperator):
             # performance refinement: prefer tunables, then overlap dims
             if ctx.tunable_space and rng.random() < 0.5:
                 name = rng.choice(sorted(ctx.tunable_space))
-                vals = [v for v in ctx.tunable_space[name]
-                        if v != parent.tunable(name)]
-                if vals:
-                    return parent.with_tunable(name, rng.choice(vals))
+                cand = self._apply_tunable(parent, name, ctx, rng)
+                if cand is not None:
+                    return cand
             dims = _BOTTLENECK_DIMS.get(self._bottleneck(ctx),
                                         tuple(DIMENSIONS)[:6])
         dim = rng.choice(dims)
@@ -155,10 +154,33 @@ class HeuristicMutator(MutationOperator):
                 return d
         return parent
 
+    @staticmethod
+    def _set_knob(d, name, value, ctx):
+        """Set one knob. ``contexts`` lives on the directive itself (a
+        dimension of C), every other knob in the tunables tuple; returns
+        None when the move produces an invalid directive."""
+        if name == "contexts":
+            cand = dataclasses.replace(d, contexts=value)
+            return cand if is_valid(cand, **ctx.traits) else None
+        return d.with_tunable(name, value)
+
+    def _apply_tunable(self, parent, name, ctx, rng):
+        """One diff-patch knob move; returns None when no distinct valid
+        value exists."""
+        cur = parent.contexts if name == "contexts" else parent.tunable(name)
+        vals = [v for v in ctx.tunable_space[name] if v != cur]
+        for v in rng.sample(vals, len(vals)):
+            cand = self._set_knob(parent, name, v, ctx)
+            if cand is not None:
+                return cand
+        return None
+
     def _retune(self, d, ctx, rng):
         for name, vals in ctx.tunable_space.items():
             if rng.random() < 0.5:
-                d = d.with_tunable(name, rng.choice(list(vals)))
+                cand = self._set_knob(d, name, rng.choice(list(vals)), ctx)
+                if cand is not None:
+                    d = cand
         return d
 
     def _bottleneck(self, ctx):

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 from repro.core.archive import MapElitesArchive
 from repro.core.cascade import Candidate, CascadeEvaluator
 from repro.core.database import CandidateDB
-from repro.core.design_space import Directive, random_directive
+from repro.core.design_space import TUNABLES, Directive, random_directive
 from repro.core.meta import MetaSummarizer
 from repro.core.mutation import HeuristicMutator, MutationContext
 
@@ -148,12 +148,18 @@ def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
 
 
 def _tunable_space(wl):
+    """Diff-patch candidate grids: the central design-space registry for
+    known knobs (block_tokens, combine_tile, tight, wire_i8), a geometric
+    grid for workload-specific integers, plus the ``contexts`` dimension
+    mirror — always refinable, so fine-grained mutations can retune the
+    send-window depth of a kernelized point without a placement move."""
     defaults = wl.default_tunables()
     space = {}
     for name, v in defaults.items():
-        if name in ("wire_i8", "tight"):
-            space[name] = (0, 1)
+        if name in TUNABLES:
+            space[name] = TUNABLES[name]
         elif isinstance(v, int) and v > 1:
             space[name] = tuple(sorted({max(1, v // 4), max(1, v // 2), v,
                                         v * 2, v * 4}))
+    space.setdefault("contexts", TUNABLES["contexts"])
     return space

@@ -33,8 +33,26 @@ are accounted separately and never exceed the padded baseline's wire.
 **Completion (design-space K):** ``SIGNAL`` waits per-edge DMA receive
 semaphores — expert compute for the earliest-arriving peer starts while
 later peers are still in flight (``TILE_PIPELINED``); ``BARRIER`` drains
-every edge before any compute (DeepEP-NVL's conservative point).
+every edge before any compute (DeepEP-NVL's conservative point); ``COUNTER``
+(the FLUX point, ``tile_fused``) consumes dispatch arrivals one microblock
+at a time and treats each landed/produced tile as a counter tick.
 ``contexts`` bounds the in-flight send window (double buffering).
+
+**Tile-fused combine (FLUX / CoCoNet point):** with ``tile_fused`` the
+expert FFN runs as a tiled GEMM loop over ``combine_tile``-row tiles and
+the combine remote-DMA for each output tile is issued the moment that tile
+is ready — instead of finishing the whole per-source FFN before any
+combine round. The trace-time round order ``(off, j, t)`` is identical on
+every rank and every combine DMA is issued unconditionally (dummy tiles go
+to the trash row), so the fused schedule still discharges under the legacy
+0.4.x interpreter's lockstep rule.
+
+**Dummy elision (real hardware):** the lockstep permutation padding exists
+only for the legacy interpreter's discharge rule. With ``elide_dummy``
+(default whenever the kernel is *not* interpreted) dummy-slot DMAs are
+predicated away with ``pl.when`` and receive waits count only the real
+blocks — the executed wire drops to :meth:`DispatchSchedule.issued_rounds`
+real rounds per direction.
 
 Combine is the exact reverse schedule: rank ``e`` returns ``counts[e]``
 processed tokens to every source, shipped bf16/f32 (DeepSeek-V3 quantizes
@@ -108,6 +126,41 @@ class DispatchSchedule:
         return sum((self.b_max - self.blocks[e]) * self.block_tokens
                    for e in range(self.n) if e != rank)
 
+    def issued_rounds(self, elide_dummy=False):
+        """Dispatch ``dma_start`` rounds each rank issues: the legacy
+        interpreter's lockstep rule pads every edge to ``b_max`` rounds;
+        real hardware (``elide_dummy``) issues only the real microblocks
+        (rank r's edge to expert e carries ``blocks[e]``, so the dispatch
+        total is identical on every rank)."""
+        if elide_dummy:
+            return int(sum(self.blocks))
+        return self.n * self.b_max
+
+    def combine_issued_rounds(self, rank=0, elide_dummy=False):
+        """Combine ``dma_start`` rounds rank ``rank`` issues. Unlike
+        dispatch this is rank-dependent: expert ``rank`` returns its own
+        ``blocks[rank]`` real microblocks to each of the n sources."""
+        if elide_dummy:
+            return self.n * int(self.blocks[rank])
+        return self.n * self.b_max
+
+    def combine_ticks(self, combine_tile=None, rank=0, elide_dummy=False):
+        """Per-tile combine writes (COUNTER ticks) of the tile-fused path:
+        each issued combine round splits into ``block_tokens/combine_tile``
+        sub-tile DMAs, each bumping the receive semaphore independently."""
+        ct = sanitize_combine_tile(combine_tile, self.block_tokens)
+        return self.combine_issued_rounds(rank, elide_dummy) \
+            * (self.block_tokens // ct)
+
+
+def sanitize_combine_tile(combine_tile, block_tokens):
+    """Largest divisor of ``block_tokens`` that is <= the requested tile."""
+    ct = int(combine_tile) if combine_tile else block_tokens
+    ct = max(1, min(ct, block_tokens))
+    while block_tokens % ct:
+        ct -= 1
+    return ct
+
 
 def make_schedule(counts, block_tokens=64, tight=True):
     counts = tuple(int(c) for c in counts)
@@ -136,7 +189,8 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
                 send_q, send_s, recv_q, recv_s, ffn_out, comb,
                 dsend, drecv, qsend, qrecv, csend, crecv,
                 *, axis, sched: DispatchSchedule, offsets, pipelined,
-                barrier, contexts, wire_i8):
+                barrier, contexts, wire_i8, tile_fused=False,
+                combine_tile=None, elide_dummy=False):
     n, B = sched.n, sched.block_tokens
     b_max, blocks, counts = sched.b_max, sched.blocks, sched.counts
     stride = b_max * B                       # slab rows per edge region
@@ -190,6 +244,23 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
     def _sem_slot(inbound_src):
         return inbound_src if LEGACY_INTERPRET else me
 
+    # With elide_dummy (real hardware — lockstep issue not required) dummy
+    # rounds are predicated away entirely: start and wait_send both sit
+    # under the same pl.when so the send semaphore stays balanced.
+    def _start(real, cps):
+        def go():
+            for cp in cps:
+                cp.start()
+        pl.when(real)(go) if elide_dummy else go()
+
+    def _wait_sent(entry):
+        real, cps = entry
+
+        def go():
+            for cp in cps:
+                cp.wait_send()
+        pl.when(real)(go) if elide_dummy else go()
+
     def dispatch_round(off, j):
         """Shift permutation r -> (r - off) % n, microblock j (dispatch)."""
         e = jax.lax.rem(me - off + n, n)               # my receiver
@@ -203,21 +274,23 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         if wire_i8:
             cps.append(_dma(send_s, recv_s, qsend, qrecv,
                             src_off, dst_off, e, slot, B))
-        for cp in cps:
-            cp.start()
-        return cps
+        _start(real, cps)
+        return real, cps
 
-    def combine_round(off, j):
-        """Reverse shift r -> (r + off) % n: expert returns tokens."""
+    def combine_round(off, j, t=0, rows=None):
+        """Reverse shift r -> (r + off) % n: expert returns tokens. The
+        tile-fused path calls this per ``rows``-row sub-tile ``t``."""
+        rows = B if rows is None else rows
         q = jax.lax.rem(me + off, n)                   # my receiver (source)
         src = jax.lax.rem(me - off + n, n)             # my sender (expert)
         real = j < _lookup(blocks, me)                 # I own expert `me`
-        src_off = jnp.where(real, q * stride + j * B, 0)
-        dst_off = jnp.where(real, me * stride + j * B, trash)
+        rel = j * B + t * rows
+        src_off = jnp.where(real, q * stride + rel, 0)
+        dst_off = jnp.where(real, me * stride + rel, trash)
         cp = _dma(ffn_out, comb, csend, crecv, src_off, dst_off, q,
-                  _sem_slot(src), B)
-        cp.start()
-        return [cp]
+                  _sem_slot(src), rows)
+        _start(real, [cp])
+        return real, [cp]
 
     def run_rounds(round_fn):
         """Issue all rounds with a bounded in-flight send window."""
@@ -225,12 +298,10 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         for off in range(n):
             for j in range(b_max):
                 if len(inflight) >= max(1, contexts):
-                    for cp in inflight.pop(0):
-                        cp.wait_send()
+                    _wait_sent(inflight.pop(0))
                 inflight.append(round_fn(off, j))
-        for cps in inflight:
-            for cp in cps:
-                cp.wait_send()
+        for entry in inflight:
+            _wait_sent(entry)
 
     blk_elems = B * d_model                            # recv-sem units/block
     scl_elems = B                                      # scale-sem units/block
@@ -238,32 +309,69 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
     def wait_recv_edge(rsems, src, nblocks, elems):
         pltpu.semaphore_wait(rsems.at[src], nblocks * elems)
 
-    def ffn_region(s_idx):
-        """Expert FFN over source region s_idx's landed tokens."""
-        src = jax.lax.rem(me + s_idx, n)
-        rows = recv_q[pl.ds(src * stride, stride)]
+    def ffn_tile(src, rel, rows):
+        """Expert FFN over ``rows`` landed tokens at region-relative offset
+        ``rel`` of source region ``src`` (one GEMM tile of the fused loop;
+        the per-source paths call it once with the whole region)."""
+        row0 = src * stride + rel
+        blk = recv_q[pl.ds(row0, rows)]
         if wire_i8:
-            rows = rows.astype(jnp.float32) * recv_s[pl.ds(src * stride,
-                                                           stride)]
-        h = swiglu_ffn(rows.astype(jnp.float32), w1_ref[...], w2_ref[...])
-        valid = (jax.lax.broadcasted_iota(jnp.int32, (stride, 1), 0)
+            blk = blk.astype(jnp.float32) * recv_s[pl.ds(row0, rows)]
+        h = swiglu_ffn(blk.astype(jnp.float32), w1_ref[...], w2_ref[...])
+        valid = (rel + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
                  < _lookup(counts, me))
-        ffn_out.at[pl.ds(src * stride, stride)][...] = jnp.where(
+        ffn_out.at[pl.ds(row0, rows)][...] = jnp.where(
             valid, h, 0.0).astype(ffn_out.dtype)
+
+    # real blocks on every inbound dispatch edge = my expert's block count
+    my_blocks = _lookup(blocks, me)
 
     # ---- dispatch ------------------------------------------------------
     run_rounds(dispatch_round)
 
-    if barrier or not pipelined:
+    if tile_fused:
+        # TILE_FUSED + COUNTER (the FLUX point): the expert FFN runs as a
+        # tiled GEMM loop and each output tile's combine DMA is issued the
+        # moment the tile is ready. Dispatch arrivals are consumed one
+        # microblock at a time (counter ticks on the edge semaphore), so
+        # the first tile computes while later peers are still in flight —
+        # and its combine write goes out before the next tile's GEMM.
+        ct = combine_tile          # sanitized by the sharded entry
+        inflight = []
+        for off in range(n):
+            src = jax.lax.rem(me + off, n)             # source region
+            for j in range(b_max):
+                real = j < my_blocks
+
+                # dummy rounds are never sent under elide_dummy, so the
+                # arrival wait is predicated away like every other elided op
+                def arrive(src=src):
+                    wait_recv_edge(drecv, src, 1, blk_elems)
+                    if wire_i8:
+                        wait_recv_edge(qrecv, src, 1, scl_elems)
+                pl.when(real)(arrive) if elide_dummy else arrive()
+                for t in range(B // ct):
+                    # off-interpret, dummy tiles skip the GEMM too — their
+                    # combine DMA is elided, so nothing reads the output
+                    def tile(rel=j * B + t * ct):
+                        ffn_tile(src, rel, ct)
+                    pl.when(real)(tile) if elide_dummy else tile()
+                    if len(inflight) >= max(1, contexts):
+                        _wait_sent(inflight.pop(0))
+                    inflight.append(combine_round(off, j, t, ct))
+        for entry in inflight:
+            _wait_sent(entry)
+    elif barrier or not pipelined:
         # BARRIER / DEFERRED: global rendezvous — drain every edge fully
         # (real + dummy blocks) before any expert compute starts.
         for s_idx in range(n):
             src = jax.lax.rem(me + s_idx, n)
-            wait_recv_edge(drecv, src, b_max, blk_elems)
+            nb = my_blocks if elide_dummy else b_max
+            wait_recv_edge(drecv, src, nb, blk_elems)
             if wire_i8:
-                wait_recv_edge(qrecv, src, b_max, scl_elems)
+                wait_recv_edge(qrecv, src, nb, scl_elems)
         for s_idx in range(n):
-            ffn_region(s_idx)
+            ffn_tile(jax.lax.rem(me + s_idx, n), 0, stride)
     else:
         # SIGNAL + TILE_PIPELINED: consume peers in arrival order — the
         # self edge (s_idx 0) computes first, hiding later dispatch edges
@@ -271,22 +379,25 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         # and its FFN runs immediately, before later edges are fenced.
         for s_idx in range(n):
             src = jax.lax.rem(me + s_idx, n)
-            wait_recv_edge(drecv, src, _lookup(blocks, me), blk_elems)
+            wait_recv_edge(drecv, src, my_blocks, blk_elems)
             if wire_i8:
-                wait_recv_edge(qrecv, src, _lookup(blocks, me), scl_elems)
-            ffn_region(s_idx)
-        # drain the dummy-block residue so every semaphore balances
-        for s_idx in range(n):
-            src = jax.lax.rem(me + s_idx, n)
-            wait_recv_edge(drecv, src, b_max - _lookup(blocks, me), blk_elems)
-            if wire_i8:
-                wait_recv_edge(qrecv, src, b_max - _lookup(blocks, me), scl_elems)
+                wait_recv_edge(qrecv, src, my_blocks, scl_elems)
+            ffn_tile(src, 0, stride)
+        if not elide_dummy:
+            # drain the dummy-block residue so every semaphore balances
+            for s_idx in range(n):
+                src = jax.lax.rem(me + s_idx, n)
+                wait_recv_edge(drecv, src, b_max - my_blocks, blk_elems)
+                if wire_i8:
+                    wait_recv_edge(qrecv, src, b_max - my_blocks, scl_elems)
 
     # ---- combine (reverse path, full precision) ------------------------
-    run_rounds(combine_round)
+    if not tile_fused:
+        run_rounds(combine_round)
     for s_idx in range(n):
         src = jax.lax.rem(me + s_idx, n)
-        wait_recv_edge(crecv, src, b_max, blk_elems)
+        nb = _lookup(blocks, src) if elide_dummy else b_max
+        wait_recv_edge(crecv, src, nb, blk_elems)
 
     # ---- assemble: region e holds my tokens processed by expert e ------
     for e in range(n):
@@ -298,24 +409,34 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
 
 def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
                                  pipelined=True, barrier=False, contexts=2,
-                                 wire_i8=False, interpret=None):
+                                 wire_i8=False, tile_fused=False,
+                                 combine_tile=None, elide_dummy=None,
+                                 interpret=None):
     """Per-device fn (under shard_map). x: (T, d) local tokens sorted into
     contiguous per-expert blocks by ``sched.counts``; w1: (d, 2f); w2:
     (f, d) — this rank's expert. Returns (T, d) combined outputs."""
     T, d = x.shape
     n, B, b_max = sched.n, sched.block_tokens, sched.b_max
     assert sum(sched.counts) == T, (sched.counts, T)
+    assert not (tile_fused and barrier), \
+        "tile_fused (COUNTER completion) excludes a BARRIER rendezvous"
     offsets = [0] * n
     for e in range(1, n):
         offsets[e] = offsets[e - 1] + sched.counts[e - 1]
     stride = b_max * B
     slab = n * stride + B                             # + trash block
     wire_dt = jnp.int8 if wire_i8 else x.dtype
+    ip = interpret if interpret is not None else interpret_params()
+    if elide_dummy is None:
+        # the lockstep permutation padding is only needed by the
+        # interpreter's discharge rule; compiled TPU builds skip it
+        elide_dummy = not ip
     kern = functools.partial(
         _moe_kernel, axis=axis, sched=sched, offsets=offsets,
         pipelined=pipelined, barrier=barrier, contexts=contexts,
-        wire_i8=wire_i8)
-    ip = interpret if interpret is not None else interpret_params()
+        wire_i8=wire_i8, tile_fused=tile_fused,
+        combine_tile=sanitize_combine_tile(combine_tile, B),
+        elide_dummy=elide_dummy)
     return pl.pallas_call(
         kern,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
@@ -342,7 +463,9 @@ def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
 
 def moe_dispatch_combine(x, w1, w2, mesh, *, axis="x", counts,
                          block_tokens=64, tight=True, pipelined=True,
-                         barrier=False, contexts=2, wire_i8=False):
+                         barrier=False, contexts=2, wire_i8=False,
+                         tile_fused=False, combine_tile=None,
+                         elide_dummy=None):
     """Global entry. x: (n, T, d) token-sharded over ``axis`` (each rank's
     rows sorted into contiguous per-expert blocks, identical static
     ``counts`` on every rank); w1: (n, d, 2f), w2: (n, f, d) — expert e's
@@ -358,7 +481,8 @@ def moe_dispatch_combine(x, w1, w2, mesh, *, axis="x", counts,
         out = moe_dispatch_combine_sharded(
             xs[0], w1s[0], w2s[0], axis=axis, sched=sched,
             pipelined=pipelined, barrier=barrier, contexts=contexts,
-            wire_i8=wire_i8)
+            wire_i8=wire_i8, tile_fused=tile_fused,
+            combine_tile=combine_tile, elide_dummy=elide_dummy)
         return out[None]
 
     return run(x, w1, w2)

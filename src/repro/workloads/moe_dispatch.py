@@ -30,8 +30,14 @@ remote-DMA'd directly into peer receive slabs at **tight per-peer sizes**
 SIGNAL completion semaphores, `contexts`-deep send windows, and the expert
 GEMM for the earliest-arriving peer starting while later peers are in
 flight (TILE_PIPELINED). A single kernel launch covers the whole
-quantize/dispatch/compute/combine chain. This unlocks the Table-3
-expert-system region of C (DeepEP NVL/IB, FLUX) for the flagship workload.
+quantize/dispatch/compute/combine chain.
+
+TILE_FUSED + COUNTER (the FLUX / CoCoNet point, Table 3) runs the expert
+FFN as a tiled GEMM loop inside the same kernel: dispatch arrivals are
+consumed one microblock at a time and each `combine_tile`-row output tile's
+combine remote-DMA is issued the moment the tile is ready — per-tile
+counter ticks instead of per-edge signals. Both kernelized points share
+the `block_tokens`/`contexts`/`combine_tile` knobs the slow path refines.
 """
 from __future__ import annotations
 
@@ -48,7 +54,8 @@ from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
 from repro.compat import shard_map
-from repro.kernels.moe_dispatch import quant_i8, swiglu_ffn
+from repro.core.cost_model import per_tile_exposed_s
+from repro.kernels.moe_dispatch import make_schedule, quant_i8, swiglu_ffn
 
 
 @register
@@ -167,19 +174,38 @@ class MoEDispatch(Workload):
     def host_baseline(self, mesh):
         return self._make(mesh, overlap=False, wire_i8=False)
 
+    # directive -> kernel-knob mapping shared by build() and analytic_cost()
+    @staticmethod
+    def _kernel_knobs(d: Directive):
+        B = max(1, int(d.tunable("block_tokens", 64)))
+        return dict(
+            block_tokens=B,
+            # PER_TILE (the FLUX coordinate) quantizes to microblocks too —
+            # both per-peer and per-tile edges carry exact token counts
+            tight=(d.granularity in ("PER_PEER", "PER_TILE")
+                   and bool(d.tunable("tight", 1))),
+            # BARRIER forces the global-rendezvous shape even under a
+            # TILE_FUSED placement; COUNTER/SIGNAL fuse the combine loop
+            tile_fused=(d.placement == "TILE_FUSED"
+                        and d.completion != "BARRIER"),
+            # raw knob value: the sharded kernel entry and the schedule's
+            # combine_ticks each sanitize at their own boundary
+            combine_tile=d.tunable("combine_tile", B),
+            pipelined=d.placement in ("TILE_FUSED", "TILE_PIPELINED",
+                                      "STREAM_SPLIT"),
+            barrier=d.completion == "BARRIER")
+
     def _make_kernel(self, mesh, d: Directive):
         from repro.kernels.moe_dispatch import moe_dispatch_combine
-        B = int(d.tunable("block_tokens", 64))
-        tight = d.granularity == "PER_PEER" and bool(d.tunable("tight", 1))
-        pipelined = d.placement in ("TILE_FUSED", "TILE_PIPELINED",
-                                    "STREAM_SPLIT")
-        barrier = d.completion == "BARRIER"
+        k = self._kernel_knobs(d)
 
         def run(x, w1, w2):
             return moe_dispatch_combine(
                 x, w1, w2, mesh, axis=self.axis,
-                counts=self._counts(x.shape[1]), block_tokens=B,
-                tight=tight, pipelined=pipelined, barrier=barrier,
+                counts=self._counts(x.shape[1]),
+                block_tokens=k["block_tokens"], tight=k["tight"],
+                pipelined=k["pipelined"], barrier=k["barrier"],
+                tile_fused=k["tile_fused"], combine_tile=k["combine_tile"],
                 contexts=int(d.contexts),
                 wire_i8=bool(d.tunable("wire_i8", 0)))
 
@@ -192,14 +218,18 @@ class MoEDispatch(Workload):
                           wire_i8=bool(d.tunable("wire_i8", 0)))
 
     def default_tunables(self):
-        return {"tight": 1, "wire_i8": 0, "block_tokens": 64}
+        return {"tight": 1, "wire_i8": 0, "block_tokens": 64,
+                "combine_tile": 64}
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
         n, T, dm, f = self.n_dev, self.T, self.d, self.f
         counts = self._counts(T)
         C = int(counts.max())
-        tight = bool(d.granularity == "PER_PEER" and d.tunable("tight", 1))
+        kernel = d.backend in ("PALLAS_RDMA", "HYBRID")
+        k = self._kernel_knobs(d) if kernel else None
+        tight = k["tight"] if kernel \
+            else bool(d.granularity == "PER_PEER" and d.tunable("tight", 1))
         wire_i8 = bool(d.tunable("wire_i8", 0))
         bytes_per = 1 if wire_i8 else 2
         # the busiest expert rank (rank 0 under skew) bounds the step
@@ -216,18 +246,46 @@ class MoEDispatch(Workload):
         t_comb = sent * dm * 2 / hw.chip.ici_link_bw  # combine in bf16
         t_quant = (2 * T * dm * 2 / hw.chip.hbm_bw) if wire_i8 else 0.0
 
-        if d.backend in ("PALLAS_RDMA", "HYBRID"):
+        if kernel:
             # fused device-initiated kernel: one launch for the whole
             # quantize/dispatch/compute/combine chain; per-edge signal
             # semaphores instead of a global barrier; per-round DMA
-            # issue/check overhead for the permutation schedule.
-            B = max(1, int(d.tunable("block_tokens", 64)))
-            rounds = 2 * n * math.ceil(C / B)        # dispatch + combine
-            sync = BARRIER_OVERHEAD if d.completion == "BARRIER" \
-                else SIGNAL_OVERHEAD * max(1, n - 1)
-            fixed = t_quant + sync + KERNEL_LAUNCH + rounds * TILE_SYNC
-            pipelined = (d.placement in ("TILE_FUSED", "TILE_PIPELINED",
-                                         "STREAM_SPLIT")
+            # issue/check overhead for the permutation schedule. The l3
+            # target is real TPU hardware, where the interpreter's lockstep
+            # dummy rounds are elided — charge the tighter executed
+            # schedule, never the padded one.
+            B = k["block_tokens"]
+            sched = make_schedule(counts, B, k["tight"])
+            disp_rounds = sched.issued_rounds(elide_dummy=True)
+            # combine rounds are rank-dependent: the busiest expert (rank
+            # 0) returns blocks[0] microblocks to every source
+            ticks = sched.combine_ticks(k["combine_tile"], rank=0,
+                                        elide_dummy=True) \
+                if k["tile_fused"] \
+                else sched.combine_issued_rounds(0, elide_dummy=True)
+            if k["tile_fused"]:
+                sync = 0.0       # readiness IS the per-tile ticks below
+                # (SIGNAL and COUNTER build the identical fused kernel)
+            elif d.completion == "BARRIER":
+                sync = BARRIER_OVERHEAD
+            else:
+                sync = SIGNAL_OVERHEAD * max(1, n - 1)
+            fixed = t_quant + sync + KERNEL_LAUNCH \
+                + (disp_rounds + ticks) * TILE_SYNC
+            if k["tile_fused"]:
+                # FLUX credit: expert compute starts once the first
+                # microblock lands, and the combine write of tile t hides
+                # behind the GEMM of tile t+1 — only the final tile's
+                # transfer stays exposed (per_tile_exposed_s), scaled by
+                # the send-window recycle stall: a contexts-deep window
+                # leaves ~1/contexts of a tile's wire unhidden while the
+                # oldest send drains before the next tile may issue.
+                startup = t_disp / max(1, disp_rounds)
+                span = max(t_disp, startup + t_comp)
+                window = 1.0 + 1.0 / max(1, int(d.contexts))
+                return span + window * per_tile_exposed_s(
+                    sent * dm * 2, hw.chip.ici_link_bw, ticks) + fixed
+            pipelined = (d.placement in ("TILE_PIPELINED", "STREAM_SPLIT")
                          and d.completion != "BARRIER" and d.contexts >= 2)
             if pipelined:
                 # self-edge compute hides dispatch; per-peer compute hides

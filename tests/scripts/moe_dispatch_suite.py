@@ -48,6 +48,14 @@ assert res_t.level == 3, (res_t.level, res_t.diagnostic)
 assert res_t.t_model_ms < res.t_model_ms, (res_t.t_model_ms, res.t_model_ms)
 print("cascade deepep_tight l3 ok (beats NVL point)")
 
+# the FLUX point (TILE_FUSED + COUNTER: tile-fused expert GEMM, per-tile
+# combine writes) evaluates to l3 through the same cascade
+res_f = ev.evaluate(Candidate(directive=EXPERT_SYSTEMS["FLUX"]))
+assert res_f.level == 3, (res_f.level, res_f.diagnostic)
+assert res_f.score > 0
+assert res_f.t_model_ms < res.t_model_ms, (res_f.t_model_ms, res.t_model_ms)
+print(f"cascade flux l3 ok ({res_f.diagnostic})")
+
 # ---- kernel numerics across realizations
 inputs = w.example_inputs(key, mesh)
 ref = np.asarray(w.reference(*inputs))
@@ -70,6 +78,24 @@ verify(D("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", "LOCAL", "GRID_STEP",
 verify(D("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", "LOCAL", "GRID_STEP",
          "PER_PEER", "ACQUIRE", 2).with_tunable("wire_i8", 1), tol=8e-2)
 print("kernel realizations ok")
+
+# ---- FLUX realizations: tile-fused expert GEMM, per-tile combine writes
+flux = EXPERT_SYSTEMS["FLUX"]
+verify(flux)                                            # Table-3 coordinates
+verify(flux.with_tunable("combine_tile", 16))           # sub-tile counters
+verify(flux.with_tunable("block_tokens", 32))
+verify(flux.with_tunable("wire_i8", 1), tol=8e-2)
+verify(D("PALLAS_RDMA", "SIGNAL", "TILE_FUSED", "LOCAL", "GRID_STEP",
+         "PER_TILE", "ACQREL", 2))                      # signal-fused variant
+verify(D("HYBRID", "COUNTER", "TILE_FUSED", "LOCAL", "GRID_STEP",
+         "PER_TILE", "ACQREL", 1))
+
+# the tile-fused kernel also matches the executable host baseline bit-path
+host_out = np.asarray(jax.jit(w.host_baseline(mesh))(*inputs))
+flux_out = np.asarray(jax.jit(w.build(flux, mesh))(*inputs))
+err = np.max(np.abs(flux_out - host_out)) / (np.max(np.abs(host_out)) + 1e-9)
+assert err < 2e-3, err
+print("flux realizations ok (matches host baseline)")
 
 # ---- skew sweep incl. a zero-count expert tail
 for skew in (2.0, 5.0):

@@ -1,0 +1,101 @@
+"""Docs consistency check (CI `docs` job): every internal markdown link and
+code reference in README.md / docs/*.md must resolve against the repo.
+
+Checked:
+  * relative markdown links ``[text](path)`` (external http/mailto and
+    pure-anchor links are skipped; ``#fragment`` suffixes are stripped);
+  * backtick code spans that look like repo paths (``src/...``,
+    ``tests/...``, ...), optionally with a ``::symbol`` suffix — the file
+    must exist and, for ``path.py::name``, define the symbol;
+  * backtick dotted-module references (``repro.kernels.moe_dispatch``) —
+    the module file must exist under src/.
+
+Exit code 1 with a per-file report on any dangling reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_PREFIXES = ("src/", "tests/", "benchmarks/", "docs/", "examples/",
+                 "tools/", ".github/")
+PATH_SPAN_RE = re.compile(
+    r"^(?:%s)[\w./\-]*(?:::[\w.]+)?$" % "|".join(re.escape(p)
+                                                 for p in PATH_PREFIXES))
+MODULE_SPAN_RE = re.compile(r"^repro(\.[A-Za-z_][\w]*)+$")
+
+
+def doc_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_link(md: pathlib.Path, target: str):
+    if target.startswith(("http://", "https://", "mailto:")):
+        return None
+    if target.startswith("#"):                    # intra-document anchor
+        return None
+    path = target.split("#")[0]
+    resolved = (md.parent / path).resolve()
+    if not resolved.exists():
+        return f"dangling link ({target})"
+    return None
+
+
+def check_code_span(span: str):
+    if PATH_SPAN_RE.match(span):
+        path, _, symbol = span.partition("::")
+        f = ROOT / path
+        if not f.exists():
+            return f"missing path ({span})"
+        if symbol and symbol.split(".")[0] not in f.read_text():
+            return f"symbol not found ({span})"
+        return None
+    if MODULE_SPAN_RE.match(span):
+        # resolve the longest dotted prefix that is a module; any remainder
+        # must be a symbol defined in that module's file
+        parts = span.split(".")
+        for k in range(len(parts), 0, -1):
+            rel = "/".join(parts[:k])
+            f = (ROOT / "src" / rel).with_suffix(".py")
+            if not f.exists():
+                f = ROOT / "src" / rel / "__init__.py"
+            if f.exists():
+                rest = parts[k:]
+                if rest and rest[0] not in f.read_text():
+                    return f"symbol not found ({span})"
+                return None
+        return f"missing module ({span})"
+    return None
+
+
+def main() -> int:
+    problems = []
+    for md in doc_files():
+        text = md.read_text()
+        rel = md.relative_to(ROOT)
+        for m in LINK_RE.finditer(text):
+            err = check_link(md, m.group(1))
+            if err:
+                problems.append(f"{rel}: {err}")
+        for m in CODE_RE.finditer(text):
+            err = check_code_span(m.group(1).strip())
+            if err:
+                problems.append(f"{rel}: {err}")
+    if problems:
+        print("docs check FAILED:")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print(f"docs check ok ({len(doc_files())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
