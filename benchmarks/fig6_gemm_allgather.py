@@ -1,11 +1,22 @@
 """Paper Figure 6: GEMM + AllGather across square matrix sizes, intra-node
-(ICI) and inter-node (DCN-rate) links — host all-gather vs CUCo fused
-per-tile broadcast."""
+(ICI) and inter-node (DCN-rate) links — host all-gather and chunked
+STREAM_SPLIT overlap vs the kernelized points: DEFERRED per-peer slab
+broadcast and the FLUX-grade TILE_FUSED + COUNTER per-tile broadcast."""
 import dataclasses
 
 from repro.core import Directive, extract_hardware_context
+from repro.core.design_space import EXPERT_SYSTEMS
 from repro.core.hardware import V5E
 from repro.workloads import get_workload
+
+POINTS = (
+    ("host", Directive("XLA_COLLECTIVE", placement="DEFERRED")),
+    ("stream_split", Directive("XLA_COLLECTIVE", placement="STREAM_SPLIT",
+                               contexts=2, tunables=(("chunks", 4),))),
+    ("deferred", Directive("PALLAS_RDMA", "SIGNAL", "DEFERRED", "LOCAL",
+                           "KERNEL", "PER_PEER", "RELEASE", 2)),
+    ("flux", EXPERT_SYSTEMS["FLUX"].with_tunable("tile_m", 128)),
+)
 
 
 def run(mesh=None):
@@ -14,16 +25,14 @@ def run(mesh=None):
     hw_inter = dataclasses.replace(
         hw, chip=dataclasses.replace(V5E, ici_link_bw=V5E.dcn_bw))
     rows = []
-    host = Directive("XLA_COLLECTIVE", placement="DEFERRED")
-    cuco = Directive("PALLAS_RDMA", "SIGNAL", "TILE_FUSED",
-                     granularity="PER_TILE", tunables=(("tile_m", 128),))
     for size in (2048, 4096, 8192):
         for link, h in (("ici", hw), ("dcn", hw_inter)):
             w = get_workload("gemm_allgather", n_dev=4, M=size, K=size,
                              N=size)
-            th = w.analytic_cost(host, h) * 1e3
-            tc = w.analytic_cost(cuco, h) * 1e3
-            rows.append((f"fig6/gemm_ag_{size}_{link}_host", th * 1e3, ""))
-            rows.append((f"fig6/gemm_ag_{size}_{link}_cuco", tc * 1e3,
-                         f"speedup={th / tc:.3f}x"))
+            costs = {name: w.analytic_cost(d, h) * 1e3 for name, d in POINTS}
+            for name, t in costs.items():
+                note = "" if name == "host" \
+                    else f"speedup={costs['host'] / t:.3f}x"
+                rows.append((f"fig6/gemm_ag_{size}_{link}_{name}", t * 1e3,
+                             note))
     return rows

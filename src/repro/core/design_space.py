@@ -69,8 +69,12 @@ TUNABLES = {
     "combine_tile": (8, 16, 32, 64, 128),     # fused-combine GEMM tile rows
     "contexts": CONTEXTS,                     # in-flight send window depth
     "tight": (0, 1),                          # exact vs padded wire sizes
+    "tile_m": (16, 32, 64, 128, 256),         # gemm_allgather GEMM tile rows
     "wire_i8": (0, 1),                        # int8 dispatch wire
 }
+# grid values need not divide a given workload shape: consumers sanitize at
+# their own boundary (sanitize_combine_tile / sanitize_tile_m) so a
+# diff-patch mutation can never crash the evaluator.
 
 DIMENSIONS = {
     "backend": BACKENDS,

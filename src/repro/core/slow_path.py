@@ -149,8 +149,8 @@ def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
 
 def _tunable_space(wl):
     """Diff-patch candidate grids: the central design-space registry for
-    known knobs (block_tokens, combine_tile, tight, wire_i8), a geometric
-    grid for workload-specific integers, plus the ``contexts`` dimension
+    known knobs (block_tokens, combine_tile, tile_m, tight, wire_i8), a
+    geometric grid for workload-specific integers, plus the ``contexts`` dimension
     mirror — always refinable, so fine-grained mutations can retune the
     send-window depth of a kernelized point without a placement move."""
     defaults = wl.default_tunables()

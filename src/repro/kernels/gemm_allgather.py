@@ -1,128 +1,270 @@
-"""Fused GEMM + device-initiated AllGather (paper workload 4).
+"""Fused GEMM + device-initiated AllGather (paper workload 4) — the
+FLUX/CoCoNet-grade tile-fused realization.
 
-Each device computes C_local = A_local @ B and broadcasts it to every peer by
-remote DMA into the peer's output slab (the LSA-analogue: direct stores into
-peer memory — here single-hop ICI remote copies).
+Each device computes ``C_local = A_local @ B`` and broadcasts it to every
+peer by remote DMA into the peer's output slab (the LSA-analogue: direct
+stores into peer memory — here single-hop ICI remote copies). Rank ``r``'s
+slab lives at rows ``[r*M_l, (r+1)*M_l)`` of every device's output, so the
+source and destination offsets of every transfer coincide.
 
-Placement realizations (design-space P):
-  TILE_FUSED — the broadcast of tile t starts as soon as tile t's GEMM
-    finishes, while tile t+1 computes (per-tile granularity G=PER_TILE).
-  DEFERRED   — one transfer per peer after the full local GEMM
-    (G=PER_PEER; the fast-path conservative shape).
+**Broadcast-round schedule.** The schedule is trace time
+(:class:`BroadcastSchedule`, the gemm_allgather analogue of
+``moe_dispatch.DispatchSchedule``): rounds ``(off, t)`` where in round
+``(off, t)`` rank ``r`` sends tile ``t`` of its slab to peer ``(r + off) %
+n`` and receives the matching tile from ``(r - off) % n`` — a shift
+permutation, so the legacy 0.4.x pallas interpreter discharges it in
+lockstep. The broadcast is *dense* (every rank ships every tile to every
+peer), so unlike the MoE dispatch schedule there are no dummy rounds and
+nothing to elide: the lockstep schedule IS the hardware schedule.
+
+**Placement realizations (design-space P):**
+  TILE_FUSED — rounds are ordered tile-major: tile ``t``'s broadcast DMAs
+    are issued the moment tile ``t``'s GEMM finishes, while tile ``t+1``
+    computes (G=PER_TILE).
+  DEFERRED   — one whole-slab round per peer offset after the full local
+    GEMM (G=PER_PEER; the fast-path conservative shape). Both paths share
+    the same schedule object; only ``rounds``/``rows_per_round`` differ.
+
+**Completion (design-space K):** ``COUNTER`` (the FLUX point) consumes
+arrivals one tile at a time — while tile ``t``'s sends are in flight the
+kernel ticks off tile ``t-1``'s landings from every peer, so readiness is
+per-tile, not per-edge. ``SIGNAL`` waits once per inbound edge after the
+tile loop. ``BARRIER`` (and any non-fused placement) drains whole slabs.
+
+**Send window.** ``contexts`` bounds the in-flight send window: at most
+``contexts`` broadcast rounds' send semaphores are unawaited; the oldest is
+``wait_send``-ed before the next round issues (double/quad buffering) —
+replacing the old kernel's wait-everything-at-``t == nt-1`` drain.
+
+Per-edge semaphores: slot ``p`` of the send array counts outstanding sends
+to peer ``p``; slot ``s`` of the receive array counts arrivals from source
+``s`` (routed through ``_sem_slot`` — see docs/kernels.md for the legacy
+vs. sender-driven slot convention).
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-from repro.compat import (interpret_params, shard_map, sync_copy,
+
+from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
+                          sync_copy,
                           compiler_params as tpu_compiler_params)
+
+# ----------------------------------------------------------------- schedule
+
+
+def sanitize_tile_m(tile_m, M_l):
+    """Largest divisor of ``M_l`` that is <= the requested tile: slow-path
+    diff patches draw ``tile_m`` from the central ``TUNABLES`` grid, which
+    need not divide a given local slab — the kernel contract requires an
+    exact divisor. One sanitizer algorithm for the whole package: this is
+    ``moe_dispatch.sanitize_combine_tile`` over the slab dimension."""
+    from repro.kernels.moe_dispatch import sanitize_combine_tile
+    return sanitize_combine_tile(tile_m, M_l)
+
+
+@dataclass(frozen=True)
+class BroadcastSchedule:
+    """Trace-time broadcast-round schedule + wire accounting (rows/rank).
+
+    ``rounds`` is the lockstep round list ``[(off, t), ...]``: in round
+    ``(off, t)`` rank ``r`` sends rows ``[t*rows_per_round, ...)`` of its
+    slab to peer ``(r + off) % n`` and receives the matching rows from
+    ``(r - off) % n`` — a shift permutation (exactly one incoming copy per
+    rank per round), identical on every rank. The fused schedule is
+    tile-major so tile ``t``'s rounds issue before tile ``t+1`` computes;
+    the DEFERRED schedule is one whole-slab round per offset.
+    """
+    n: int
+    M_l: int
+    tile_m: int              # sanitized: always divides M_l
+    fused: bool
+
+    @property
+    def nt(self):
+        return self.M_l // self.tile_m
+
+    @property
+    def rows_per_round(self):
+        return self.tile_m if self.fused else self.M_l
+
+    @property
+    def rounds(self):
+        if self.fused:
+            return [(off, t) for t in range(self.nt)
+                    for off in range(1, self.n)]
+        return [(off, 0) for off in range(1, self.n)]
+
+    def issued_rounds(self):
+        """Broadcast ``dma_start`` rounds each rank issues — dense, so no
+        elided/lockstep split: ``(n-1)*nt`` fused, ``n-1`` deferred."""
+        return len(self.rounds)
+
+    def wire_rows(self, rank=0):
+        """Rows each rank broadcasts off-rank (dense: identical on every
+        rank, and identical for the fused and deferred schedules — the
+        schedule changes *when* rows move, never how many)."""
+        return (self.n - 1) * self.M_l
+
+    def completion_ticks(self, counter=True):
+        """Receive-side readiness ticks: COUNTER consumes arrivals one
+        tile at a time (one tick per inbound ``(src, tile)`` edge); SIGNAL
+        and the DEFERRED slab path wait once per inbound edge."""
+        if self.fused and counter:
+            return (self.n - 1) * self.nt
+        return self.n - 1
+
+    def send_window_depths(self, contexts):
+        """See ``moe_dispatch.send_window_depths`` (the shared trace-time
+        mirror of the kernels' windowed-issue algorithm)."""
+        from repro.kernels.moe_dispatch import send_window_depths
+        return send_window_depths(self.rounds, contexts)
+
+
+def make_broadcast_schedule(n_dev, M_l, tile_m=128, fused=True):
+    return BroadcastSchedule(n=int(n_dev), M_l=int(M_l),
+                             tile_m=sanitize_tile_m(tile_m, M_l),
+                             fused=bool(fused))
+
+
+# ------------------------------------------------------------------- kernel
 
 
 def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
-               *, axis, n_dev, M_l, tm, fused):
-    t = pl.program_id(0)
-    nt = pl.num_programs(0)
+               *, axis, sched: BroadcastSchedule, counter, contexts):
+    n, M_l, tm, nt = sched.n, sched.M_l, sched.tile_m, sched.nt
+    N = b_ref.shape[1]
     me = jax.lax.axis_index(axis)
 
-    ctile[...] = jax.lax.dot_general(
-        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(ctile.dtype)
-    row0 = me * M_l + t * tm
-    sync_copy(ctile, o_ref.at[pl.ds(row0, tm)])
+    # Receive-slot convention: slot s = edge from source rank s. The legacy
+    # lockstep discharge bumps the slot named by the *receiver's own*
+    # descriptor (my inbound peer this round); faithful sender-driven RDMA
+    # bumps the slot the *sender* names (its own rank). Same convention
+    # either way once routed through here (docs/kernels.md).
+    def _sem_slot(inbound_src):
+        return inbound_src if LEGACY_INTERPRET else me
 
-    def bcast(src_rows, nrows):
-        for off in range(1, n_dev):
-            peer = jax.lax.rem(me + off, n_dev)
-            pltpu.make_async_remote_copy(
-                src_ref=o_ref.at[pl.ds(src_rows, nrows)],
-                dst_ref=o_ref.at[pl.ds(src_rows, nrows)],
-                send_sem=ssem, recv_sem=rsem, device_id=peer,
-                device_id_type=pltpu.DeviceIdType.MESH).start()
+    def edge_dma(off, rel, rows):
+        """Round (off, .): ship rows [rel, rel+rows) of my slab to peer
+        (me+off)%n; the matching inbound rows land from (me-off)%n."""
+        peer = jax.lax.rem(me + off, n)
+        src = jax.lax.rem(me - off + n, n)
+        rows0 = me * M_l + rel
+        return pltpu.make_async_remote_copy(
+            src_ref=o_ref.at[pl.ds(rows0, rows)],
+            dst_ref=o_ref.at[pl.ds(rows0, rows)],
+            send_sem=ssem.at[peer], recv_sem=rsem.at[_sem_slot(src)],
+            device_id=peer, device_id_type=pltpu.DeviceIdType.MESH)
 
-    if fused:
-        bcast(row0, tm)                      # per-tile, overlaps next tile
+    def gemm_tile(t):
+        # compute stages through the VMEM ctile scratch (Mosaic requires
+        # compute results in VMEM on real hardware; o_ref lives in ANY)
+        ctile[...] = jax.lax.dot_general(
+            a_ref[pl.ds(t * tm, tm)], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(ctile.dtype)
+        sync_copy(ctile, o_ref.at[pl.ds(me * M_l + t * tm, tm)])
+
+    def wait_arrivals(off, rows):
+        src = jax.lax.rem(me - off + n, n)
+        pltpu.semaphore_wait(rsem.at[src], rows * N)
+
+    # contexts-deep send window over the trace-time round order: every DMA
+    # is issued unconditionally (lockstep rule), the window only bounds how
+    # many send semaphores stay unawaited.
+    cap = max(1, int(contexts))
+    inflight = []
+
+    def issue(off, rel, rows):
+        if len(inflight) >= cap:
+            inflight.pop(0).wait_send()
+        cp = edge_dma(off, rel, rows)
+        cp.start()
+        inflight.append(cp)
+
+    if sched.fused:
+        # TILE_FUSED: tile t's broadcast issues the moment its GEMM ends,
+        # overlapping tile t+1's compute — lockstep (off, t) order.
+        for t in range(nt):
+            gemm_tile(t)
+            for off in range(1, n):
+                issue(off, t * tm, tm)
+            if counter and t > 0:
+                # COUNTER per-tile ticks: consume tile t-1's arrivals from
+                # every peer while tile t's sends are still in flight
+                for off in range(1, n):
+                    wait_arrivals(off, tm)
+        for cp in inflight:
+            cp.wait_send()
+        if counter:
+            for off in range(1, n):          # the final tile's ticks
+                wait_arrivals(off, tm)
+        else:
+            for off in range(1, n):          # per-edge SIGNAL drain
+                wait_arrivals(off, nt * tm)
     else:
-        @pl.when(t == nt - 1)
-        def _send_all():
-            bcast(me * M_l, M_l)             # one slab per peer, deferred
-
-    @pl.when(t == nt - 1)
-    def _drain():
-        # wait for all outgoing sends and all peers' incoming tiles
-        for off in range(1, n_dev):
-            peer = jax.lax.rem(me + off, n_dev)
-            src_peer = jax.lax.rem(me - off + n_dev, n_dev)
-            if fused:
-                for tt in range(nt):
-                    out_rows = me * M_l + tt * tm
-                    in_rows = src_peer * M_l + tt * tm
-                    pltpu.make_async_remote_copy(
-                        src_ref=o_ref.at[pl.ds(out_rows, tm)],
-                        dst_ref=o_ref.at[pl.ds(out_rows, tm)],
-                        send_sem=ssem, recv_sem=rsem, device_id=peer,
-                        device_id_type=pltpu.DeviceIdType.MESH).wait_send()
-                    pltpu.make_async_remote_copy(
-                        src_ref=o_ref.at[pl.ds(in_rows, tm)],
-                        dst_ref=o_ref.at[pl.ds(in_rows, tm)],
-                        send_sem=ssem, recv_sem=rsem, device_id=peer,
-                        device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
-            else:
-                pltpu.make_async_remote_copy(
-                    src_ref=o_ref.at[pl.ds(me * M_l, M_l)],
-                    dst_ref=o_ref.at[pl.ds(me * M_l, M_l)],
-                    send_sem=ssem, recv_sem=rsem, device_id=peer,
-                    device_id_type=pltpu.DeviceIdType.MESH).wait_send()
-                pltpu.make_async_remote_copy(
-                    src_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
-                    dst_ref=o_ref.at[pl.ds(src_peer * M_l, M_l)],
-                    send_sem=ssem, recv_sem=rsem, device_id=peer,
-                    device_id_type=pltpu.DeviceIdType.MESH).wait_recv()
+        # DEFERRED: one whole-slab round per peer after the full GEMM,
+        # same schedule object with rows_per_round = M_l.
+        for t in range(nt):
+            gemm_tile(t)
+        for off in range(1, n):
+            issue(off, 0, M_l)
+        for cp in inflight:
+            cp.wait_send()
+        for off in range(1, n):
+            wait_arrivals(off, M_l)
 
 
-def gemm_allgather_sharded(a, b, *, axis, n_dev, tile_m=128, fused=True,
-                           interpret=None):
-    """Per-device fn (under shard_map). a: (M_l, K) local; b: (K, N) replicated.
-    Returns (n_dev*M_l, N) — the full gathered GEMM output on every device."""
+def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
+                           n_dev=None, tile_m=128, fused=True, counter=False,
+                           contexts=2, interpret=None):
+    """Per-device fn (under shard_map). a: (M_l, K) local; b: (K, N)
+    replicated. Returns (n_dev*M_l, N) — the full gathered GEMM output on
+    every device. An explicit ``sched`` takes precedence: the
+    ``n_dev``/``tile_m``/``fused`` knobs are consulted only to build one
+    when ``sched`` is None."""
     M_l, K = a.shape
     N = b.shape[1]
-    tm = min(tile_m, M_l)
-    assert M_l % tm == 0
-    kern = functools.partial(_ga_kernel, axis=axis, n_dev=n_dev, M_l=M_l,
-                             tm=tm, fused=fused)
+    if sched is None:
+        sched = make_broadcast_schedule(n_dev, M_l, tile_m, fused)
+    assert sched.M_l == M_l, (sched.M_l, M_l)
+    assert M_l % sched.tile_m == 0, (M_l, sched.tile_m)
+    kern = functools.partial(_ga_kernel, axis=axis, sched=sched,
+                             counter=bool(counter), contexts=contexts)
     ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
-        grid=(M_l // tm,),
-        in_specs=[
-            pl.BlockSpec((tm, K), lambda t: (t, 0)),
-            pl.BlockSpec((K, N), lambda t: (0, 0)),
-        ],
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((n_dev * M_l, N), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((sched.n * M_l, N), a.dtype),
         scratch_shapes=[
-            pltpu.VMEM((tm, N), a.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((sched.tile_m, N), a.dtype),  # GEMM tile staging
+            pltpu.SemaphoreType.DMA((sched.n,)),     # per-peer send slots
+            pltpu.SemaphoreType.DMA((sched.n,)),     # per-source recv slots
         ],
         interpret=ip,
         compiler_params=tpu_compiler_params(collective_id=11),
     )(a, b)
 
 
-def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True):
-    """Global entry: a_shards (n, M_l, K) sharded over axis; b replicated."""
+def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True,
+                   counter=False, contexts=2):
+    """Global entry: a_shards (n, M_l, K) sharded over axis; b replicated.
+    ``tile_m`` is sanitized to a divisor of M_l; ``counter`` selects
+    per-tile completion ticks (the FLUX point) on the fused path."""
     from jax.sharding import PartitionSpec as P
     n_dev = mesh.shape[axis]
+    sched = make_broadcast_schedule(n_dev, a_shards.shape[1], tile_m, fused)
 
     @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis), P(None, None)),
                        out_specs=P(axis), check_vma=False)
     def run(a, bb):
-        out = gemm_allgather_sharded(a[0], bb, axis=axis, n_dev=n_dev,
-                                     tile_m=tile_m, fused=fused)
+        out = gemm_allgather_sharded(a[0], bb, axis=axis, sched=sched,
+                                     counter=counter, contexts=contexts)
         return out[None]
 
     return run(a_shards, b)

@@ -75,6 +75,22 @@ from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
 # ----------------------------------------------------------------- schedule
 
 
+def send_window_depths(rounds, contexts):
+    """In-flight send depth after each issued round under a ``contexts``-
+    deep window — the kernels' issue algorithm (wait_send the oldest
+    in-flight round before issuing past the cap) mirrored at trace time.
+    Shared by ``DispatchSchedule`` and ``gemm_allgather.BroadcastSchedule``
+    and property-tested in tests/test_schedules.py."""
+    cap = max(1, int(contexts))
+    depth, out = 0, []
+    for _ in rounds:
+        if depth >= cap:
+            depth -= 1
+        depth += 1
+        out.append(depth)
+    return out
+
+
 def block_counts(counts, block_tokens, tight=True):
     """Microblocks per edge into each expert. Padded mode ships the
     max-capacity block count on every edge (the XLA all-to-all shape)."""
@@ -143,6 +159,10 @@ class DispatchSchedule:
         if elide_dummy:
             return self.n * int(self.blocks[rank])
         return self.n * self.b_max
+
+    def send_window_depths(self, contexts):
+        """See module-level :func:`send_window_depths`."""
+        return send_window_depths(self.rounds, contexts)
 
     def combine_ticks(self, combine_tile=None, rank=0, elide_dummy=False):
         """Per-tile combine writes (COUNTER ticks) of the tile-fused path:

@@ -25,8 +25,10 @@ def ring_attention(q, k, v, mesh, *, axis="x", causal=True, pipelined=True,
     return fn(q, k, v)
 
 
-def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True):
-    fn = jax.jit(partial(_ga, mesh=mesh, axis=axis, tile_m=tile_m, fused=fused))
+def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True,
+                   counter=False, contexts=2):
+    fn = jax.jit(partial(_ga, mesh=mesh, axis=axis, tile_m=tile_m,
+                         fused=fused, counter=counter, contexts=contexts))
     return fn(a_shards, b)
 
 

@@ -4,11 +4,19 @@ collective).
 Host baseline: local GEMM, then an XLA all-gather of the full output —
 sequential by data dependence.
 
-Device-initiated builds: repro.kernels.gemm_allgather — the result tile is
-broadcast to peers by remote DMA as soon as it is computed (TILE_FUSED,
-G=PER_TILE), or per-peer slabs after the full GEMM (DEFERRED). The XLA
-STREAM_SPLIT build chunks the GEMM and all-gathers chunk c while chunk c+1
-computes.
+Device-initiated builds: repro.kernels.gemm_allgather — the second fully
+kernelized workload (after moe_dispatch). TILE_FUSED broadcasts each result
+tile by remote DMA the moment its GEMM finishes (G=PER_TILE; with COUNTER
+completion the receive side ticks arrivals off one tile at a time — the
+FLUX point); DEFERRED ships one whole slab per peer after the full GEMM.
+Both run the same trace-time ``BroadcastSchedule`` under a ``contexts``-deep
+send window. The XLA STREAM_SPLIT build chunks the GEMM and all-gathers
+chunk c while chunk c+1 computes.
+
+``_kernel_knobs`` is the single directive→knob mapping both ``build()`` and
+``analytic_cost()`` consult (the search contract, docs/kernels.md); the
+``tile_m`` tunable is drawn from the central ``TUNABLES`` grid and sanitized
+to a divisor of the local slab at each shape boundary.
 """
 from __future__ import annotations
 
@@ -18,8 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.cost_model import per_tile_exposed_s
 from repro.core.design_space import Directive
-from repro.kernels.gemm_allgather import gemm_allgather as ga_kernel
+from repro.kernels.gemm_allgather import (gemm_allgather as ga_kernel,
+                                          make_broadcast_schedule,
+                                          sanitize_tile_m)
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
@@ -84,17 +95,33 @@ class GemmAllGather(Workload):
 
         return run
 
+    # directive -> kernel-knob mapping shared by build() and analytic_cost()
+    @staticmethod
+    def _kernel_knobs(d: Directive, M_l):
+        return dict(
+            # the TUNABLES grid need not divide a given local slab — the
+            # kernel contract requires an exact divisor, so sanitize here
+            # (a slow-path diff patch must never crash the evaluator)
+            tile_m=sanitize_tile_m(d.tunable("tile_m", 128), M_l),
+            # BARRIER forces the deferred whole-slab drain even under a
+            # TILE_FUSED placement (mirrors moe_dispatch._kernel_knobs)
+            fused=(d.placement in ("TILE_FUSED", "TILE_PIPELINED")
+                   and d.completion != "BARRIER"),
+            # COUNTER = per-tile arrival ticks (the FLUX point); SIGNAL
+            # keeps per-tile issue but waits once per inbound edge
+            counter=d.completion == "COUNTER")
+
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 return self._stream_split(mesh, int(d.tunable("chunks", 4)))
             return self.host_baseline(mesh)
-        fused = d.placement in ("TILE_FUSED", "TILE_PIPELINED")
-        tile_m = int(d.tunable("tile_m", 128))
 
         def run(a, b):
-            return ga_kernel(a, b, mesh, axis=self.axis, tile_m=tile_m,
-                             fused=fused)
+            k = self._kernel_knobs(d, a.shape[1])
+            return ga_kernel(a, b, mesh, axis=self.axis, tile_m=k["tile_m"],
+                             fused=k["fused"], counter=k["counter"],
+                             contexts=int(d.contexts))
 
         return run
 
@@ -118,10 +145,34 @@ class GemmAllGather(Workload):
                 return per + max((chunks - 1) * per, (chunks - 1) * pw) + pw \
                     + sync + KERNEL_LAUNCH * 2
             return t_gemm + t_wire + sync + KERNEL_LAUNCH * 2
-        if d.placement in ("TILE_FUSED", "TILE_PIPELINED"):
-            tiles = max(1, M_l // max(1, int(d.tunable("tile_m", 128))))
-            per = t_gemm / tiles
-            pw = t_wire / tiles
-            return per + max((tiles - 1) * per, (tiles - 1) * pw) + pw \
-                + tiles * TILE_SYNC + sync + KERNEL_LAUNCH
-        return t_gemm + t_wire + sync + KERNEL_LAUNCH
+
+        # kernelized (PALLAS_RDMA / HYBRID): one fused launch; the schedule
+        # charges TILE_SYNC per issued broadcast round and per completion
+        # tick — same accounting shape as the moe_dispatch kernel model.
+        k = self._kernel_knobs(d, M_l)
+        sched = make_broadcast_schedule(n, M_l, k["tile_m"], k["fused"])
+        ticks = sched.completion_ticks(k["counter"])
+        if d.completion == "BARRIER":
+            sync = BARRIER_OVERHEAD
+        elif k["counter"]:
+            sync = 0.0        # readiness IS the per-tile ticks below
+        else:
+            sync = SIGNAL_OVERHEAD * max(1, n - 1)
+        fixed = sync + KERNEL_LAUNCH \
+            + (sched.issued_rounds() + ticks) * TILE_SYNC
+        if k["fused"]:
+            # FLUX credit: tile t's broadcast hides behind tile t+1's GEMM
+            # — only the final tile's transfer stays exposed
+            # (per_tile_exposed_s over the per-tile issue granularity),
+            # scaled by the send-window recycle stall: a contexts-deep
+            # window leaves ~1/contexts of a tile's wire unhidden while
+            # the oldest send drains before the next round may issue.
+            per_gemm = t_gemm / max(1, sched.nt)
+            span = max(t_gemm, per_gemm + t_wire)
+            window = 1.0 + 1.0 / max(1, int(d.contexts))
+            return span + window * per_tile_exposed_s(
+                wire, hw.chip.ici_link_bw, sched.issued_rounds()) + fixed
+        # DEFERRED slab path: comm strictly after compute; the window
+        # pipelines the per-peer slabs on the wire but the serial
+        # dependence on the full GEMM remains.
+        return t_gemm + t_wire + fixed

@@ -1,0 +1,211 @@
+"""gemm_allgather expert-point validity + broadcast-schedule cost accounting
+(the analog of test_expert_points.py for the second kernelized workload).
+
+These run without hypothesis and without simulated devices (the 1-rank
+cascade smoke uses the default 1-device jax): directive validity and the l3
+analytic model are pure functions. The executable 4-rank interpret-mode
+counterparts live in tests/scripts/collective_kernels_suite.py.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.cost_model import per_tile_exposed_s
+from repro.core.design_space import EXPERT_SYSTEMS, TUNABLES, Directive
+from repro.core.hardware import V5E, HardwareContext
+from repro.workloads import get_workload
+
+HW = HardwareContext(chip=V5E, mesh_shape=(4,), mesh_axes=("x",),
+                     chips_per_pod=4, n_chips=4, has_dcn=False)
+
+FLUX = EXPERT_SYSTEMS["FLUX"]
+HOST = Directive("XLA_COLLECTIVE", placement="DEFERRED")
+DEFERRED_KERNEL = Directive("PALLAS_RDMA", "SIGNAL", "DEFERRED", "LOCAL",
+                            "KERNEL", "PER_PEER", "RELEASE", 2)
+
+
+def ga(**kw):
+    kw.setdefault("n_dev", 4)
+    kw.setdefault("M", 4096)
+    kw.setdefault("K", 4096)
+    kw.setdefault("N", 4096)
+    return get_workload("gemm_allgather", **kw)
+
+
+def test_gemm_allgather_is_kernelizable():
+    w = ga()
+    assert w.kernelizable
+    assert w.traits(HW)["kernelizable"]
+
+
+def test_expert_points_valid_for_gemm_allgather():
+    """Every Table-3 expert directive validates under the gemm_allgather
+    traits — in particular FLUX (TILE_FUSED + COUNTER), the point the
+    kernel realizes per-tile."""
+    w = ga()
+    for name, d in EXPERT_SYSTEMS.items():
+        v = w.check(d, HW)
+        assert not v, (name, v)
+    assert not w.check(DEFERRED_KERNEL, HW)
+
+
+# ------------------------------------------------- broadcast-round schedule
+
+def test_broadcast_schedule_shapes():
+    from repro.kernels.gemm_allgather import make_broadcast_schedule
+
+    fused = make_broadcast_schedule(4, 1024, 128, fused=True)
+    assert fused.nt == 8
+    assert fused.issued_rounds() == 3 * 8
+    assert fused.rows_per_round == 128
+    slab = make_broadcast_schedule(4, 1024, 128, fused=False)
+    assert slab.issued_rounds() == 3
+    assert slab.rows_per_round == 1024
+    # the schedule changes when rows move, never how many
+    assert fused.wire_rows() == slab.wire_rows() == 3 * 1024
+    # COUNTER ticks per (src, tile) edge; SIGNAL/DEFERRED per edge
+    assert fused.completion_ticks(counter=True) == 3 * 8
+    assert fused.completion_ticks(counter=False) == 3
+    assert slab.completion_ticks(counter=False) == 3
+
+
+def test_per_tile_overlap_credit_monotone():
+    """The per-tile broadcast credit (cost_model.per_tile_exposed_s): the
+    exposed tail shrinks monotonically as the tick count grows — finer
+    tiles leave less of the final transfer on the critical path."""
+    wire = 3 * 1024 * 4096 * 2
+    exposed = [per_tile_exposed_s(wire, V5E.ici_link_bw, t)
+               for t in (1, 3, 8, 24, 96)]
+    assert all(a > b for a, b in zip(exposed, exposed[1:]))
+    # and the workload model consumes it: more tiles -> smaller exposed
+    # tail but more TILE_SYNC ticks, so the knob has a real optimum
+    w = ga()
+    coarse = w.analytic_cost(FLUX.with_tunable("tile_m", 128), HW)
+    fine = w.analytic_cost(FLUX.with_tunable("tile_m", 32), HW)
+    assert coarse != fine
+
+
+def test_flux_point_beats_host_and_deferred():
+    """At the paper shape the fused per-tile broadcast beats both the host
+    all-gather and the kernelized DEFERRED slab path; a deeper send window
+    shrinks the per-tile recycle stall."""
+    w = ga()
+    host = w.analytic_cost(HOST, HW)
+    deferred = w.analytic_cost(DEFERRED_KERNEL, HW)
+    flux = w.analytic_cost(FLUX, HW)
+    assert flux < deferred < host
+    deeper = dataclasses.replace(FLUX, contexts=2)
+    assert w.analytic_cost(deeper, HW) < flux
+
+
+def test_build_and_cost_share_knob_mapping():
+    """_kernel_knobs is the single directive->knob mapping: BARRIER forces
+    the deferred drain even under TILE_FUSED, COUNTER marks per-tile
+    ticks, and tile_m is sanitized to a divisor of the local slab."""
+    w = ga()
+    k = w._kernel_knobs(FLUX, 1024)
+    assert k == {"tile_m": 128, "fused": True, "counter": True}
+    barrier = dataclasses.replace(FLUX, completion="BARRIER")
+    assert not w._kernel_knobs(barrier, 1024)["fused"]
+    assert w._kernel_knobs(FLUX.with_tunable("tile_m", 96), 128)["tile_m"] \
+        == 64
+
+
+# ------------------------------------------------------ tile_m sanitization
+
+def test_tile_m_sanitized_to_divisor():
+    """ISSUE-4 satellite fix: an unsanitized tile_m used to hit the
+    kernel's ``assert M_l % tm == 0`` — a slow-path mutation could crash
+    the evaluator. Every grid value (and worse) must map to a divisor."""
+    from repro.kernels.gemm_allgather import sanitize_tile_m
+
+    for M_l in (64, 96, 128, 192, 1024):
+        for req in list(TUNABLES["tile_m"]) + [1, 7, 96, 100, 10_000]:
+            tm = sanitize_tile_m(req, M_l)
+            assert M_l % tm == 0, (req, M_l, tm)
+            assert 1 <= tm <= M_l
+    # exact divisors pass through untouched
+    assert sanitize_tile_m(128, 1024) == 128
+    assert sanitize_tile_m(None, 512) == 512
+
+
+def test_non_divisor_tile_m_does_not_crash_evaluator():
+    """The cascade survives (and scores) a directive whose tile_m does not
+    divide the example-input slab."""
+    from repro.core.cascade import Candidate, CascadeEvaluator
+    from repro.core.hardware import extract_hardware_context
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    w = ga(n_dev=1)
+    ev = CascadeEvaluator(w, mesh, extract_hardware_context(mesh))
+    for bad in (96, 100, 7):
+        res = ev.evaluate(Candidate(directive=FLUX.with_tunable("tile_m",
+                                                                bad)))
+        assert res.level == 3, (bad, res.diagnostic)
+
+
+# ------------------------------------------------ slow-path tunable space
+
+def test_tile_m_in_slow_path_search_space():
+    """tile_m is a refinable diff-patch dimension for the kernelized
+    gemm_allgather points, drawn from the central TUNABLES registry."""
+    import random
+
+    from repro.core.cascade import Candidate, EvalResult
+    from repro.core.mutation import HeuristicMutator, MutationContext
+    from repro.core.slow_path import _tunable_space
+
+    space = _tunable_space(ga())
+    assert space["tile_m"] == TUNABLES["tile_m"]
+    assert "contexts" in space and "chunks" in space
+
+    traits = ga().traits(HW)
+    parent = Candidate(directive=FLUX)
+    parent.result = EvalResult(3, 100.0, 1.0, diagnostic="ok: modeled")
+    ctx = MutationContext(parent=parent, phase="exploit", traits=traits,
+                          tunable_space=space)
+    mut = HeuristicMutator()
+    moved = set()
+    for seed in range(400):
+        rng = random.Random(seed)
+        child, _ = mut.propose(ctx, rng)
+        if child.contexts != parent.directive.contexts:
+            moved.add("contexts")
+        if child.tunable("tile_m") != parent.directive.tunable("tile_m"):
+            moved.add("tile_m")
+    assert {"tile_m", "contexts"} <= moved, moved
+
+
+# --------------------------------------------------------- l3 cascade smoke
+
+def test_flux_gemm_allgather_cascade_reaches_l3():
+    """The FLUX directive builds, verifies under interpret mode, and
+    scores at l3 through the full cascade (1-rank mesh; the 4-rank version
+    runs in tests/scripts/collective_kernels_suite.py)."""
+    from repro.core.cascade import Candidate, CascadeEvaluator
+    from repro.core.hardware import extract_hardware_context
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    w = ga(n_dev=1)
+    ev = CascadeEvaluator(w, mesh, extract_hardware_context(mesh))
+    for d in (FLUX, DEFERRED_KERNEL):
+        res = ev.evaluate(Candidate(directive=d))
+        assert res.level == 3, res.diagnostic
+        assert res.score > 0
+
+
+def test_fig6_reports_kernelized_rows():
+    from benchmarks import fig6_gemm_allgather
+
+    rows = fig6_gemm_allgather.run()
+    names = [r[0] for r in rows]
+    for size in (2048, 4096, 8192):
+        for point in ("host", "stream_split", "deferred", "flux"):
+            assert f"fig6/gemm_ag_{size}_ici_{point}" in names
+    host = next(r for r in rows if r[0] == "fig6/gemm_ag_4096_ici_host")
+    flux = next(r for r in rows if r[0] == "fig6/gemm_ag_4096_ici_flux")
+    deferred = next(r for r in rows
+                    if r[0] == "fig6/gemm_ag_4096_ici_deferred")
+    assert flux[1] < deferred[1] < host[1]

@@ -1,0 +1,120 @@
+"""Property tests for the trace-time round schedules of the device-initiated
+kernels: the moe_dispatch permutation-round schedule (``DispatchSchedule``)
+and the gemm_allgather broadcast-round schedule (``BroadcastSchedule``).
+
+Invariants (docs/kernels.md — the lockstep contract the legacy 0.4.x pallas
+interpreter enforces at runtime):
+  * every (peer-offset, tile/microblock) edge appears exactly once;
+  * the round order is total, deterministic, and rank-independent (lockstep:
+    every rank issues the same DMA sequence);
+  * the ``contexts``-deep send window never exceeds its cap and drains.
+"""
+import pytest
+
+# property tests need hypothesis (optional test dep): skip, not error.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gemm_allgather import (BroadcastSchedule,
+                                          make_broadcast_schedule,
+                                          sanitize_tile_m)
+from repro.kernels.moe_dispatch import (make_schedule,
+                                        sanitize_combine_tile)
+
+# ----------------------------------------------------- strategy definitions
+
+bcast_scheds = st.builds(
+    lambda n, nt, tile_m, fused: make_broadcast_schedule(
+        n, nt * tile_m, tile_m, fused),
+    n=st.integers(1, 8), nt=st.integers(1, 16),
+    tile_m=st.sampled_from((8, 32, 128)), fused=st.booleans())
+
+disp_scheds = st.builds(
+    lambda counts, B, tight: make_schedule(counts, B, tight),
+    counts=st.lists(st.integers(0, 300), min_size=1, max_size=8),
+    B=st.sampled_from((16, 64)), tight=st.booleans())
+
+contexts = st.sampled_from((1, 2, 4))
+
+
+# ------------------------------------------------------- broadcast schedule
+
+@given(bcast_scheds)
+@settings(max_examples=200, deadline=None)
+def test_broadcast_every_edge_exactly_once(s):
+    rounds = s.rounds
+    assert len(rounds) == len(set(rounds)) == s.issued_rounds()
+    if s.fused:
+        assert set(rounds) == {(off, t) for off in range(1, s.n)
+                               for t in range(s.nt)}
+    else:
+        assert set(rounds) == {(off, 0) for off in range(1, s.n)}
+    # dense: every round moves rows_per_round rows, totalling the wire
+    assert len(rounds) * s.rows_per_round == s.wire_rows()
+
+
+@given(bcast_scheds)
+@settings(max_examples=200, deadline=None)
+def test_broadcast_order_total_and_tile_major(s):
+    """Lockstep order: the round list is rank-independent by construction
+    (no rank appears in it) and strictly ordered tile-major — tile t's
+    broadcast issues before any tile t+1 round, so the fused kernel can
+    overlap tile t+1's GEMM with tile t's wire."""
+    rounds = s.rounds
+    assert rounds == sorted(rounds, key=lambda r: (r[1], r[0]))
+    assert rounds == s.rounds            # deterministic (a pure property)
+
+
+@given(bcast_scheds)
+@settings(max_examples=200, deadline=None)
+def test_broadcast_ticks_cover_wire(s):
+    # COUNTER ticks split the per-edge wait into per-tile waits: the tick
+    # count times the tile rows covers exactly the inbound wire
+    ticks = s.completion_ticks(counter=True)
+    if s.fused:
+        assert ticks * s.tile_m == (s.n - 1) * s.M_l
+    assert s.completion_ticks(counter=False) == s.n - 1
+
+
+@given(st.one_of(bcast_scheds, disp_scheds), contexts)
+@settings(max_examples=200, deadline=None)
+def test_send_window_never_exceeds_contexts(s, ctx):
+    depths = s.send_window_depths(ctx)
+    assert len(depths) == len(s.rounds)
+    assert all(1 <= d <= max(1, ctx) for d in depths)
+    # the window saturates once enough rounds exist (no artificial stall)
+    if len(depths) >= ctx:
+        assert max(depths, default=0) == min(ctx, len(depths))
+
+
+# ----------------------------------------------------- dispatch (moe) rounds
+
+@given(disp_scheds)
+@settings(max_examples=200, deadline=None)
+def test_dispatch_every_edge_exactly_once(s):
+    rounds = s.rounds
+    assert len(rounds) == len(set(rounds)) == s.n * s.b_max
+    assert set(rounds) == {(off, j) for off in range(s.n)
+                           for j in range(s.b_max)}
+
+
+@given(disp_scheds)
+@settings(max_examples=200, deadline=None)
+def test_dispatch_wire_accounting_consistent(s):
+    for rank in range(s.n):
+        executed = s.executed_wire_tokens(rank)
+        dummy = s.dummy_wire_tokens(rank)
+        # lockstep rounds ship executed + dummy = the padded per-edge total
+        assert executed + dummy == (s.n - 1) * s.b_max * s.block_tokens
+        # the exact l3 credit never exceeds the block-rounded execution
+        assert s.wire_tokens(rank) <= executed or not s.tight
+    assert s.issued_rounds(elide_dummy=True) <= s.issued_rounds()
+
+
+@given(st.integers(1, 256), st.integers(0, 512))
+@settings(max_examples=200, deadline=None)
+def test_sanitizers_return_divisors(B, req):
+    ct = sanitize_combine_tile(req, B)
+    assert B % ct == 0 and 1 <= ct <= B
+    tm = sanitize_tile_m(req, B)
+    assert B % tm == 0 and 1 <= tm <= B
