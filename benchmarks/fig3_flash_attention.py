@@ -1,29 +1,41 @@
 """Paper Figure 3: Flash Attention with Context Parallelism — host-driven
-NCCL-analogue vs CUCo device-initiated fused ring kernel, over SEQ x HD.
+NCCL-analogue vs CUCo device-initiated ring kernels, over SEQ x HD.
 
-Modeled latency at the paper's deployment (4 devices, ring) from the v5e
-roofline composition; wall-clock on reduced shapes confirms the ordering.
+Four points per shape, matching the fig4/fig6 row pattern: the host
+baseline, the lazy-fence TILE_PIPELINED overlap point (cuco), and the two
+kernelized ``RingSchedule`` realizations — the DEFERRED in-kernel rotation
+and the FLUX-ring (TILE_FUSED + COUNTER per-chunk rotation). Modeled
+latency at the paper's deployment (4 devices, ring) from the v5e roofline
+composition; wall-clock on reduced shapes confirms the ordering.
 """
 from repro.core import Directive, extract_hardware_context
+from repro.core.design_space import EXPERT_SYSTEMS
 from repro.workloads import get_workload
+
+POINTS = (
+    ("host", Directive("XLA_COLLECTIVE", placement="DEFERRED")),
+    ("cuco", Directive("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED",
+                       contexts=2)),
+    ("deferred", Directive("PALLAS_RDMA", "SIGNAL", "DEFERRED", "LOCAL",
+                           "KERNEL", "PER_PEER", "RELEASE", 2)),
+    ("flux", EXPERT_SYSTEMS["FLUX"].with_tunable("kv_chunk", 64)),
+)
 
 
 def run(mesh=None):
-    import jax
     from repro.launch.mesh import make_mesh
     hw_mesh = mesh or make_mesh((1,), ("x",))
     hw = extract_hardware_context(hw_mesh)
     rows = []
-    host = Directive("XLA_COLLECTIVE", placement="DEFERRED")
-    cuco = Directive("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", contexts=2)
     for seq in (4096, 8192):
         for hd in (32, 64):
             w = get_workload("ring_attention", n_dev=4, BH=12 * 8, seq=seq,
                              hd=hd)
-            t_host = w.analytic_cost(host, hw) * 1e3
-            t_cuco = w.analytic_cost(cuco, hw) * 1e3
-            rows.append((f"fig3/ring_attn_seq{seq}_hd{hd}_host",
-                         t_host * 1e3, ""))
-            rows.append((f"fig3/ring_attn_seq{seq}_hd{hd}_cuco",
-                         t_cuco * 1e3, f"speedup={t_host / t_cuco:.3f}x"))
+            costs = {name: w.analytic_cost(d, hw) * 1e3
+                     for name, d in POINTS}
+            for name, t in costs.items():
+                note = "" if name == "host" \
+                    else f"speedup={costs['host'] / t:.3f}x"
+                rows.append((f"fig3/ring_attn_seq{seq}_hd{hd}_{name}",
+                             t * 1e3, note))
     return rows

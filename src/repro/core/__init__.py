@@ -13,7 +13,13 @@ from repro.core.design_space import (Directive, CONSERVATIVE, DIMENSIONS,
 from repro.core.hardware import V5E, ChipSpec, HardwareContext, \
     extract_hardware_context
 from repro.core.cost_model import (RooflineReport, parse_collectives,
-                                   per_tile_exposed_s, roofline_from_compiled)
+                                   per_tile_exposed_s, roofline_from_compiled,
+                                   window_stall_factor)
+from repro.core.schedule import (CollectiveSchedule, BroadcastSchedule,
+                                 DispatchSchedule, RingSchedule, SendWindow,
+                                 make_broadcast_schedule, make_ring_schedule,
+                                 make_schedule, sanitize_tile,
+                                 send_window_depths)
 from repro.core.comm_graph import analyze as analyze_comm_graph
 from repro.core.cascade import Candidate, CascadeEvaluator, EvalResult
 from repro.core.database import CandidateDB, embed_code
@@ -29,7 +35,11 @@ __all__ = [
     "violations", "is_valid", "random_directive", "enumerate_valid",
     "V5E", "ChipSpec", "HardwareContext", "extract_hardware_context",
     "RooflineReport", "parse_collectives", "per_tile_exposed_s",
-    "roofline_from_compiled",
+    "roofline_from_compiled", "window_stall_factor",
+    "CollectiveSchedule", "BroadcastSchedule", "DispatchSchedule",
+    "RingSchedule", "SendWindow", "make_broadcast_schedule",
+    "make_ring_schedule", "make_schedule", "sanitize_tile",
+    "send_window_depths",
     "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",
     "CandidateDB", "embed_code", "MapElitesArchive", "HeuristicMutator",
     "LLMMutator", "MutationContext", "parse_directive", "MetaSummarizer",

@@ -89,6 +89,15 @@ def per_tile_exposed_s(wire_bytes, link_bw, tiles) -> float:
     return wire_bytes / link_bw / max(1, int(tiles))
 
 
+def window_stall_factor(contexts) -> float:
+    """Send-window recycle stall of a ``contexts``-deep in-flight window:
+    the oldest send must drain before the next round may issue, leaving
+    ~``1/contexts`` of a tile's wire unhidden. Scales the per-tile exposed
+    tail in every kernelized TILE_FUSED cost model (the knob the slow
+    path's ``contexts`` diff patches move)."""
+    return 1.0 + 1.0 / max(1, int(contexts))
+
+
 def _wire_factor(kind: str, n: int) -> float:
     if n <= 1:
         return 0.0

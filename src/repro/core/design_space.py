@@ -66,15 +66,17 @@ CONTEXTS = (1, 2, 4)
 # retune the send-window depth without a placement move.
 TUNABLES = {
     "block_tokens": (16, 32, 64, 128, 256),   # microblock rows per DMA round
+    "chained": (0, 1),                        # kv_shuttle K→V signal chain
     "combine_tile": (8, 16, 32, 64, 128),     # fused-combine GEMM tile rows
     "contexts": CONTEXTS,                     # in-flight send window depth
+    "kv_chunk": (16, 32, 64, 128, 256),       # ring rotation chunk rows
     "tight": (0, 1),                          # exact vs padded wire sizes
     "tile_m": (16, 32, 64, 128, 256),         # gemm_allgather GEMM tile rows
     "wire_i8": (0, 1),                        # int8 dispatch wire
 }
 # grid values need not divide a given workload shape: consumers sanitize at
-# their own boundary (sanitize_combine_tile / sanitize_tile_m) so a
-# diff-patch mutation can never crash the evaluator.
+# their own boundary (core/schedule.py::sanitize_tile and its per-knob
+# aliases) so a diff-patch mutation can never crash the evaluator.
 
 DIMENSIONS = {
     "backend": BACKENDS,

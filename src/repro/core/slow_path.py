@@ -149,10 +149,14 @@ def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
 
 def _tunable_space(wl):
     """Diff-patch candidate grids: the central design-space registry for
-    known knobs (block_tokens, combine_tile, tile_m, tight, wire_i8), a
-    geometric grid for workload-specific integers, plus the ``contexts`` dimension
-    mirror — always refinable, so fine-grained mutations can retune the
-    send-window depth of a kernelized point without a placement move."""
+    known knobs (block_tokens, combine_tile, tile_m, kv_chunk, chained,
+    tight, wire_i8 — any workload ``default_tunables()`` name found in
+    ``TUNABLES``), a geometric grid for workload-specific integers, plus
+    the ``contexts`` dimension mirror — always refinable, so fine-grained
+    mutations can retune the send-window depth of a kernelized point
+    without a placement move. Tile-shaped knobs are sanitized by their
+    consumers (``core/schedule.py::sanitize_tile``), so any grid value is
+    safe to propose."""
     defaults = wl.default_tunables()
     space = {}
     for name, v in defaults.items():

@@ -44,110 +44,40 @@ vs. sender-driven slot convention).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
-                          sync_copy,
+from repro.compat import (interpret_params, shard_map, sync_copy,
                           compiler_params as tpu_compiler_params)
-
-# ----------------------------------------------------------------- schedule
-
-
-def sanitize_tile_m(tile_m, M_l):
-    """Largest divisor of ``M_l`` that is <= the requested tile: slow-path
-    diff patches draw ``tile_m`` from the central ``TUNABLES`` grid, which
-    need not divide a given local slab — the kernel contract requires an
-    exact divisor. One sanitizer algorithm for the whole package: this is
-    ``moe_dispatch.sanitize_combine_tile`` over the slab dimension."""
-    from repro.kernels.moe_dispatch import sanitize_combine_tile
-    return sanitize_combine_tile(tile_m, M_l)
-
-
-@dataclass(frozen=True)
-class BroadcastSchedule:
-    """Trace-time broadcast-round schedule + wire accounting (rows/rank).
-
-    ``rounds`` is the lockstep round list ``[(off, t), ...]``: in round
-    ``(off, t)`` rank ``r`` sends rows ``[t*rows_per_round, ...)`` of its
-    slab to peer ``(r + off) % n`` and receives the matching rows from
-    ``(r - off) % n`` — a shift permutation (exactly one incoming copy per
-    rank per round), identical on every rank. The fused schedule is
-    tile-major so tile ``t``'s rounds issue before tile ``t+1`` computes;
-    the DEFERRED schedule is one whole-slab round per offset.
-    """
-    n: int
-    M_l: int
-    tile_m: int              # sanitized: always divides M_l
-    fused: bool
-
-    @property
-    def nt(self):
-        return self.M_l // self.tile_m
-
-    @property
-    def rows_per_round(self):
-        return self.tile_m if self.fused else self.M_l
-
-    @property
-    def rounds(self):
-        if self.fused:
-            return [(off, t) for t in range(self.nt)
-                    for off in range(1, self.n)]
-        return [(off, 0) for off in range(1, self.n)]
-
-    def issued_rounds(self):
-        """Broadcast ``dma_start`` rounds each rank issues — dense, so no
-        elided/lockstep split: ``(n-1)*nt`` fused, ``n-1`` deferred."""
-        return len(self.rounds)
-
-    def wire_rows(self, rank=0):
-        """Rows each rank broadcasts off-rank (dense: identical on every
-        rank, and identical for the fused and deferred schedules — the
-        schedule changes *when* rows move, never how many)."""
-        return (self.n - 1) * self.M_l
-
-    def completion_ticks(self, counter=True):
-        """Receive-side readiness ticks: COUNTER consumes arrivals one
-        tile at a time (one tick per inbound ``(src, tile)`` edge); SIGNAL
-        and the DEFERRED slab path wait once per inbound edge."""
-        if self.fused and counter:
-            return (self.n - 1) * self.nt
-        return self.n - 1
-
-    def send_window_depths(self, contexts):
-        """See ``moe_dispatch.send_window_depths`` (the shared trace-time
-        mirror of the kernels' windowed-issue algorithm)."""
-        from repro.kernels.moe_dispatch import send_window_depths
-        return send_window_depths(self.rounds, contexts)
-
-
-def make_broadcast_schedule(n_dev, M_l, tile_m=128, fused=True):
-    return BroadcastSchedule(n=int(n_dev), M_l=int(M_l),
-                             tile_m=sanitize_tile_m(tile_m, M_l),
-                             fused=bool(fused))
+# The schedule machinery is defined once, in repro.core.schedule (the
+# collective-schedule contract); re-exported here for the kernel's callers.
+from repro.core.schedule import (BroadcastSchedule, SendWindow,  # noqa: F401
+                                 make_broadcast_schedule, sanitize_tile_m,
+                                 sem_slot)
 
 
 # ------------------------------------------------------------------- kernel
 
 
-def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
+def _ga_kernel(a_ref, b_ref, o_ref, atile, bbuf, ctile, ssem, rsem,
                *, axis, sched: BroadcastSchedule, counter, contexts):
     n, M_l, tm, nt = sched.n, sched.M_l, sched.tile_m, sched.nt
     N = b_ref.shape[1]
     me = jax.lax.axis_index(axis)
 
-    # Receive-slot convention: slot s = edge from source rank s. The legacy
-    # lockstep discharge bumps the slot named by the *receiver's own*
-    # descriptor (my inbound peer this round); faithful sender-driven RDMA
-    # bumps the slot the *sender* names (its own rank). Same convention
-    # either way once routed through here (docs/kernels.md).
+    # GEMM operands live in ANY (HBM): B is staged into VMEM once, each A
+    # tile per round — the interpreter tolerates direct ANY reads but
+    # Mosaic on real TPU requires DMA-staged VMEM operands.
+    sync_copy(b_ref, bbuf)
+
+    # Receive-slot convention routed through the shared contract helper
+    # (core/schedule.py::sem_slot): slot s = edge from source rank s,
+    # under either the legacy lockstep or the sender-driven engine.
     def _sem_slot(inbound_src):
-        return inbound_src if LEGACY_INTERPRET else me
+        return sem_slot(me, inbound_src)
 
     def edge_dma(off, rel, rows):
         """Round (off, .): ship rows [rel, rel+rows) of my slab to peer
@@ -162,10 +92,11 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
             device_id=peer, device_id_type=pltpu.DeviceIdType.MESH)
 
     def gemm_tile(t):
-        # compute stages through the VMEM ctile scratch (Mosaic requires
-        # compute results in VMEM on real hardware; o_ref lives in ANY)
+        # operands and result both stage through VMEM scratch (atile/bbuf
+        # in, ctile out); a_ref/o_ref live in ANY
+        sync_copy(a_ref.at[pl.ds(t * tm, tm)], atile)
         ctile[...] = jax.lax.dot_general(
-            a_ref[pl.ds(t * tm, tm)], b_ref[...], (((1,), (0,)), ((), ())),
+            atile[...], bbuf[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32).astype(ctile.dtype)
         sync_copy(ctile, o_ref.at[pl.ds(me * M_l + t * tm, tm)])
 
@@ -173,18 +104,14 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
         src = jax.lax.rem(me - off + n, n)
         pltpu.semaphore_wait(rsem.at[src], rows * N)
 
-    # contexts-deep send window over the trace-time round order: every DMA
-    # is issued unconditionally (lockstep rule), the window only bounds how
-    # many send semaphores stay unawaited.
-    cap = max(1, int(contexts))
-    inflight = []
+    # contexts-deep send window over the trace-time round order (the shared
+    # schedule.SendWindow): every DMA is issued unconditionally (lockstep
+    # rule), the window only bounds how many rounds' send semaphores stay
+    # unawaited.
+    window = SendWindow(contexts)
 
     def issue(off, rel, rows):
-        if len(inflight) >= cap:
-            inflight.pop(0).wait_send()
-        cp = edge_dma(off, rel, rows)
-        cp.start()
-        inflight.append(cp)
+        window.push([edge_dma(off, rel, rows)])
 
     if sched.fused:
         # TILE_FUSED: tile t's broadcast issues the moment its GEMM ends,
@@ -198,8 +125,7 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
                 # every peer while tile t's sends are still in flight
                 for off in range(1, n):
                     wait_arrivals(off, tm)
-        for cp in inflight:
-            cp.wait_send()
+        window.drain()
         if counter:
             for off in range(1, n):          # the final tile's ticks
                 wait_arrivals(off, tm)
@@ -213,8 +139,7 @@ def _ga_kernel(a_ref, b_ref, o_ref, ctile, ssem, rsem,
             gemm_tile(t)
         for off in range(1, n):
             issue(off, 0, M_l)
-        for cp in inflight:
-            cp.wait_send()
+        window.drain()
         for off in range(1, n):
             wait_arrivals(off, M_l)
 
@@ -230,6 +155,8 @@ def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
     M_l, K = a.shape
     N = b.shape[1]
     if sched is None:
+        assert n_dev is not None, \
+            "gemm_allgather_sharded needs an explicit sched= or n_dev="
         sched = make_broadcast_schedule(n_dev, M_l, tile_m, fused)
     assert sched.M_l == M_l, (sched.M_l, M_l)
     assert M_l % sched.tile_m == 0, (M_l, sched.tile_m)
@@ -242,6 +169,8 @@ def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         out_shape=jax.ShapeDtypeStruct((sched.n * M_l, N), a.dtype),
         scratch_shapes=[
+            pltpu.VMEM((sched.tile_m, K), a.dtype),  # staged A tile operand
+            pltpu.VMEM((K, N), b.dtype),             # staged B operand
             pltpu.VMEM((sched.tile_m, N), a.dtype),  # GEMM tile staging
             pltpu.SemaphoreType.DMA((sched.n,)),     # per-peer send slots
             pltpu.SemaphoreType.DMA((sched.n,)),     # per-source recv slots

@@ -1,15 +1,26 @@
 """KV-cache shuttle: chained GPU-triggered sends for disaggregated
-prefill->decode serving (paper workload 3, Table 4 row 3).
+prefill->decode serving (paper workload 3, Table 4 row 3) — realized
+against the shared collective-schedule contract
+(``repro.core.schedule.RingSchedule``, the ``n = 2`` degenerate ring:
+one rotation step, prefill → decode).
 
-The prefill rank computes K = x@Wk, starts its send, computes V = x@Wv while
-K is on the wire, then sends V (signal-chained). The decode rank waits
-entirely on-device. The CUCo-discovered strategy is exactly this chain
-("K GEMM -> send K -> V GEMM -> send V with signal"); the host-driven
-baseline computes both projections, then transfers both (idle network during
-compute, idle compute during transfer).
+The prefill rank computes K = x@Wk, starts its send, computes V = x@Wv
+while K is on the wire, then sends V (signal-chained). The decode rank
+waits entirely on-device. The CUCo-discovered strategy is exactly this
+chain ("K GEMM -> send K -> V GEMM -> send V with signal"); the
+host-driven baseline computes both projections, then transfers both.
 
-``chained=False`` reproduces the sequential shape inside the kernel:
-each send is awaited before the next GEMM starts.
+Realizations, all driven by the one schedule:
+
+  TILE_FUSED (+COUNTER = the FLUX point) — chunk-major rounds: the K/V
+    projections run as ``kv_chunk``-row GEMM tiles and each tile's send is
+    issued the moment its GEMM finishes (the next tile's GEMM hides the
+    wire), under a ``contexts``-deep send window; the decode rank ticks
+    arrivals off one chunk at a time (per-chunk receive semaphores).
+  chained (``chained=1``, the non-fused CUCo point) — whole-tensor rounds,
+    K's flight overlapping V's GEMM.
+  sequential (``chained=0``) — each send awaited before the next GEMM
+    starts (the host-driven shape inside one kernel).
 """
 from __future__ import annotations
 
@@ -21,43 +32,83 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
                           compiler_params as tpu_compiler_params)
+from repro.core.schedule import (RingSchedule, SendWindow,  # noqa: F401
+                                 make_ring_schedule)
 
 
 def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
-                    kbuf, vbuf, ksem, krecv, vsem, vrecv,
-                    *, axis, chained, decode_rank):
+                    kbuf, vbuf, ksend, krecv, vsend, vrecv,
+                    *, axis, sched: RingSchedule, chained, counter,
+                    contexts, decode_rank):
     me = jax.lax.axis_index(axis)
+    nc, cr = sched.nc, sched.kv_chunk
+    dk = kbuf.shape[1]
+    chunk_elems = cr * dk
 
-    def kdma():
+    def chunk_dma(buf, o_ref, ssem, rsem_slot, c, nchunks):
         return pltpu.make_async_remote_copy(
-            src_ref=kbuf, dst_ref=ko_ref, send_sem=ksem, recv_sem=krecv,
+            src_ref=buf.at[pl.ds(c * cr, nchunks * cr)],
+            dst_ref=o_ref.at[pl.ds(c * cr, nchunks * cr)],
+            send_sem=ssem, recv_sem=rsem_slot,
             device_id=decode_rank, device_id_type=pltpu.DeviceIdType.MESH)
 
-    def vdma():
-        return pltpu.make_async_remote_copy(
-            src_ref=vbuf, dst_ref=vo_ref, send_sem=vsem, recv_sem=vrecv,
-            device_id=decode_rank, device_id_type=pltpu.DeviceIdType.MESH)
+    # contexts-deep send window over the schedule's (step, chunk) rounds
+    # (the shared schedule.SendWindow): a round's K/V pair counts as ONE
+    # window entry — the K half opens the round, the V half (issued after
+    # the V tile's GEMM) amends it — so the executed window depth matches
+    # the schedule contract and the l3 model's window_stall_factor credit.
+    window = SendWindow(contexts)
+
+    def gemm_tile(buf, w_ref, c, nchunks):
+        rows = nchunks * cr
+        buf.at[pl.ds(c * cr, rows)][...] = jax.lax.dot_general(
+            x_ref[pl.ds(c * cr, rows)], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(buf.dtype)
 
     def _prefill():
-        kbuf[...] = jax.lax.dot_general(
-            x_ref[...], wk_ref[...], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(kbuf.dtype)
-        kd = kdma()
-        kd.start()                       # K on the wire ...
-        if not chained:
-            kd.wait_send()               # sequential: drain before V GEMM
-        vbuf[...] = jax.lax.dot_general(
-            x_ref[...], wv_ref[...], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(vbuf.dtype)
-        vd = vdma()
-        vd.start()
-        if chained:
-            kd.wait_send()
-        vd.wait_send()
+        if sched.fused:
+            # TILE_FUSED: tile c's send issues the moment its GEMM ends —
+            # K tile then V tile, so each wire hides behind the next GEMM
+            for c in range(nc):
+                gemm_tile(kbuf, wk_ref, c, 1)
+                window.push([chunk_dma(kbuf, ko_ref, ksend, krecv.at[c],
+                                       c, 1)])
+                gemm_tile(vbuf, wv_ref, c, 1)
+                window.amend(chunk_dma(vbuf, vo_ref, vsend, vrecv.at[c],
+                                       c, 1))
+            window.drain()
+        else:
+            # one whole-tensor round: K opens it, V amends it after its
+            # GEMM (chained — K flies while V computes); the sequential
+            # shape drains K's send before the V GEMM starts
+            gemm_tile(kbuf, wk_ref, 0, nc)
+            window.push([chunk_dma(kbuf, ko_ref, ksend, krecv.at[0],
+                                   0, nc)])
+            if not chained:
+                window.drain()       # sequential: drain before the V GEMM
+            gemm_tile(vbuf, wv_ref, 0, nc)
+            if chained:
+                window.amend(chunk_dma(vbuf, vo_ref, vsend, vrecv.at[0],
+                                       0, nc))
+            else:
+                window.push([chunk_dma(vbuf, vo_ref, vsend, vrecv.at[0],
+                                       0, nc)])
+            window.drain()
 
     def _decode():
-        kdma().wait_recv()
-        vdma().wait_recv()
+        if sched.fused and counter:
+            # COUNTER: tick arrivals off one chunk at a time
+            for c in range(nc):
+                pltpu.semaphore_wait(krecv.at[c], chunk_elems)
+                pltpu.semaphore_wait(vrecv.at[c], chunk_elems)
+        elif sched.fused:
+            for c in range(nc):      # SIGNAL: per-edge drain after the loop
+                pltpu.semaphore_wait(krecv.at[c], chunk_elems)
+            for c in range(nc):
+                pltpu.semaphore_wait(vrecv.at[c], chunk_elems)
+        else:
+            pltpu.semaphore_wait(krecv.at[0], nc * chunk_elems)
+            pltpu.semaphore_wait(vrecv.at[0], nc * chunk_elems)
 
     if LEGACY_INTERPRET:
         # The legacy interpreter discharges a remote DMA via an all_gather
@@ -74,14 +125,22 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
         pl.when(me == decode_rank)(_decode)
 
 
-def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
+def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, fused=False,
+                       counter=False, kv_chunk=None, contexts=2,
+                       sched: RingSchedule = None, decode_rank=1,
                        interpret=None):
     """Per-device fn (under shard_map over a 2-rank axis).
-    x: (T, d); wk/wv: (d, dk). Returns (K, V) — valid on the decode rank."""
+    x: (T, d); wk/wv: (d, dk). Returns (K, V) — valid on the decode rank.
+    An explicit ``sched`` takes precedence over the knob arguments."""
     T, d = x.shape
     dk = wk.shape[1]
-    kern = functools.partial(_shuttle_kernel, axis=axis, chained=chained,
-                             decode_rank=decode_rank)
+    if sched is None:
+        sched = make_ring_schedule(2, T, kv_chunk or (64 if fused else T),
+                                   fused)
+    assert sched.rows == T, (sched, T)
+    kern = functools.partial(_shuttle_kernel, axis=axis, sched=sched,
+                             chained=chained, counter=counter,
+                             contexts=contexts, decode_rank=decode_rank)
     ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
@@ -95,15 +154,18 @@ def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, decode_rank=1,
         scratch_shapes=[
             pltpu.VMEM((T, dk), x.dtype),
             pltpu.VMEM((T, dk), x.dtype),
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,                 # k send
+            pltpu.SemaphoreType.DMA((sched.nc,)),    # k per-chunk recv
+            pltpu.SemaphoreType.DMA,                 # v send
+            pltpu.SemaphoreType.DMA((sched.nc,)),    # v per-chunk recv
         ],
         interpret=ip,
         compiler_params=tpu_compiler_params(collective_id=13),
     )(x, wk, wv)
 
 
-def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True):
+def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True, fused=False,
+               counter=False, kv_chunk=None, contexts=2):
     """Global entry. x: (2, T, d) sharded over the 2-rank axis (prefill rank
     holds real activations); wk/wv replicated. Returns K/V gathered per rank
     — row [1] (decode rank) holds the shuttled projections."""
@@ -113,7 +175,9 @@ def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True):
                        in_specs=(P(axis), P(None, None), P(None, None)),
                        out_specs=(P(axis), P(axis)), check_vma=False)
     def run(xs, k, v):
-        ko, vo = kv_shuttle_sharded(xs[0], k, v, axis=axis, chained=chained)
+        ko, vo = kv_shuttle_sharded(xs[0], k, v, axis=axis, chained=chained,
+                                    fused=fused, counter=counter,
+                                    kv_chunk=kv_chunk, contexts=contexts)
         # the prefill rank never writes its own output buffers: zero them
         me = jax.lax.axis_index(axis)
         ko = jnp.where(me == 1, ko, 0.0)

@@ -61,132 +61,20 @@ dispatch only; combine stays high precision).
 from __future__ import annotations
 
 import functools
-import math
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.compat import (LEGACY_INTERPRET, interpret_params, shard_map,
+from repro.compat import (interpret_params, shard_map, sync_copy,
                           compiler_params as tpu_compiler_params)
-
-# ----------------------------------------------------------------- schedule
-
-
-def send_window_depths(rounds, contexts):
-    """In-flight send depth after each issued round under a ``contexts``-
-    deep window — the kernels' issue algorithm (wait_send the oldest
-    in-flight round before issuing past the cap) mirrored at trace time.
-    Shared by ``DispatchSchedule`` and ``gemm_allgather.BroadcastSchedule``
-    and property-tested in tests/test_schedules.py."""
-    cap = max(1, int(contexts))
-    depth, out = 0, []
-    for _ in rounds:
-        if depth >= cap:
-            depth -= 1
-        depth += 1
-        out.append(depth)
-    return out
-
-
-def block_counts(counts, block_tokens, tight=True):
-    """Microblocks per edge into each expert. Padded mode ships the
-    max-capacity block count on every edge (the XLA all-to-all shape)."""
-    b = [int(math.ceil(c / block_tokens)) for c in counts]
-    if not tight:
-        b = [max(b)] * len(b)
-    return b
-
-
-@dataclass(frozen=True)
-class DispatchSchedule:
-    """Trace-time routing schedule + its wire accounting (tokens, per rank).
-
-    ``rounds`` is the lockstep permutation-round list ``[(off, j), ...]``:
-    in round ``(off, j)`` rank ``r`` exchanges microblock ``j`` with peer
-    ``(r - off) % n`` (dispatch) / ``(r + off) % n`` (combine).
-    """
-    n: int
-    block_tokens: int
-    counts: tuple          # exact tokens routed to each expert (per rank)
-    blocks: tuple          # microblocks per edge into each expert
-    tight: bool
-
-    @property
-    def b_max(self):
-        return max(self.blocks)
-
-    @property
-    def rounds(self):
-        return [(off, j) for off in range(self.n)
-                for j in range(self.b_max)]
-
-    def wire_tokens(self, rank=0):
-        """Exact off-rank tokens rank ``rank`` dispatches (the l3 credit):
-        tight = sum(counts) - counts[rank]; padded = C * (n - 1)."""
-        if self.tight:
-            return int(sum(self.counts)) - int(self.counts[rank])
-        return int(max(self.counts)) * (self.n - 1)
-
-    def executed_wire_tokens(self, rank=0):
-        """Block-rounded off-rank tokens the kernel actually ships for rank
-        ``rank`` (real microblocks only, dummies excluded)."""
-        return sum(self.blocks[e] * self.block_tokens
-                   for e in range(self.n) if e != rank)
-
-    def dummy_wire_tokens(self, rank=0):
-        """Off-rank dummy (trash-row) tokens the lockstep interpreter path
-        additionally ships for rank ``rank``; elided on real hardware."""
-        return sum((self.b_max - self.blocks[e]) * self.block_tokens
-                   for e in range(self.n) if e != rank)
-
-    def issued_rounds(self, elide_dummy=False):
-        """Dispatch ``dma_start`` rounds each rank issues: the legacy
-        interpreter's lockstep rule pads every edge to ``b_max`` rounds;
-        real hardware (``elide_dummy``) issues only the real microblocks
-        (rank r's edge to expert e carries ``blocks[e]``, so the dispatch
-        total is identical on every rank)."""
-        if elide_dummy:
-            return int(sum(self.blocks))
-        return self.n * self.b_max
-
-    def combine_issued_rounds(self, rank=0, elide_dummy=False):
-        """Combine ``dma_start`` rounds rank ``rank`` issues. Unlike
-        dispatch this is rank-dependent: expert ``rank`` returns its own
-        ``blocks[rank]`` real microblocks to each of the n sources."""
-        if elide_dummy:
-            return self.n * int(self.blocks[rank])
-        return self.n * self.b_max
-
-    def send_window_depths(self, contexts):
-        """See module-level :func:`send_window_depths`."""
-        return send_window_depths(self.rounds, contexts)
-
-    def combine_ticks(self, combine_tile=None, rank=0, elide_dummy=False):
-        """Per-tile combine writes (COUNTER ticks) of the tile-fused path:
-        each issued combine round splits into ``block_tokens/combine_tile``
-        sub-tile DMAs, each bumping the receive semaphore independently."""
-        ct = sanitize_combine_tile(combine_tile, self.block_tokens)
-        return self.combine_issued_rounds(rank, elide_dummy) \
-            * (self.block_tokens // ct)
-
-
-def sanitize_combine_tile(combine_tile, block_tokens):
-    """Largest divisor of ``block_tokens`` that is <= the requested tile."""
-    ct = int(combine_tile) if combine_tile else block_tokens
-    ct = max(1, min(ct, block_tokens))
-    while block_tokens % ct:
-        ct -= 1
-    return ct
-
-
-def make_schedule(counts, block_tokens=64, tight=True):
-    counts = tuple(int(c) for c in counts)
-    return DispatchSchedule(
-        n=len(counts), block_tokens=block_tokens, counts=counts,
-        blocks=tuple(block_counts(counts, block_tokens, tight)), tight=tight)
+# The schedule machinery is defined once, in repro.core.schedule (the
+# collective-schedule contract); re-exported here for the kernel's callers.
+from repro.core.schedule import (DispatchSchedule, SendWindow,  # noqa: F401
+                                 block_counts, make_schedule,
+                                 sanitize_combine_tile, sem_slot,
+                                 send_window_depths)
 
 
 # ------------------------------------------------------------------- kernel
@@ -206,6 +94,7 @@ def swiglu_ffn(x, w1, w2):
 
 
 def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
+                xbuf, w1buf, w2buf,
                 send_q, send_s, recv_q, recv_s, ffn_out, comb,
                 dsend, drecv, qsend, qrecv, csend, crecv,
                 *, axis, sched: DispatchSchedule, offsets, pipelined,
@@ -217,6 +106,13 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
     trash = n * stride                       # trash row block for dummies
     d_model = x_ref.shape[1]
     me = jax.lax.axis_index(axis)
+
+    # GEMM operands live in ANY (HBM): stage them into VMEM before any
+    # compute touches them — the interpreter tolerates direct ANY reads
+    # but Mosaic on real TPU requires DMA-staged VMEM operands.
+    sync_copy(x_ref, xbuf)
+    sync_copy(w1_ref, w1buf)
+    sync_copy(w2_ref, w2buf)
     def _lookup(table, idx):
         # static-table lookup by traced index without capturing a constant
         # array (the legacy pallas tracer rejects non-scalar kernel consts)
@@ -226,7 +122,7 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         return out
 
     # ---- stage: per-expert token blocks, B-quantized regions, wire dtype
-    x = x_ref[...]
+    x = xbuf[...]
     parts = []
     for e in range(n):
         if counts[e] == 0:
@@ -255,14 +151,11 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
             send_sem=ssems.at[peer], recv_sem=rsems.at[src_rank],
             device_id=peer, device_id_type=pltpu.DeviceIdType.MESH)
 
-    # The receive-semaphore slot convention is "slot s = edge from source
-    # rank s". Under faithful sender-driven RDMA (hardware / the modern
-    # InterpretParams simulator) the *sender's* descriptor names the slot
-    # its signal lands in on the receiver -> the issuer's own rank (me).
-    # The legacy lockstep discharge instead increments the slot named by
-    # the *receiver's* own descriptor -> my inbound peer for this round.
+    # Receive-slot convention routed through the shared contract helper
+    # (core/schedule.py::sem_slot): slot s = edge from source rank s,
+    # under either the legacy lockstep or the sender-driven engine.
     def _sem_slot(inbound_src):
-        return inbound_src if LEGACY_INTERPRET else me
+        return sem_slot(me, inbound_src)
 
     # With elide_dummy (real hardware — lockstep issue not required) dummy
     # rounds are predicated away entirely: start and wait_send both sit
@@ -294,7 +187,6 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         if wire_i8:
             cps.append(_dma(send_s, recv_s, qsend, qrecv,
                             src_off, dst_off, e, slot, B))
-        _start(real, cps)
         return real, cps
 
     def combine_round(off, j, t=0, rows=None):
@@ -309,19 +201,22 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         dst_off = jnp.where(real, me * stride + rel, trash)
         cp = _dma(ffn_out, comb, csend, crecv, src_off, dst_off, q,
                   _sem_slot(src), rows)
-        _start(real, [cp])
         return real, [cp]
+
+    def make_window():
+        """The shared contexts-deep send window (schedule.SendWindow) with
+        the elide_dummy hooks: a round's start and wait_send both sit under
+        the same pl.when(real) so the send semaphore stays balanced."""
+        return SendWindow(contexts, start=lambda e: _start(*e),
+                          wait=_wait_sent)
 
     def run_rounds(round_fn):
         """Issue all rounds with a bounded in-flight send window."""
-        inflight = []
+        window = make_window()
         for off in range(n):
             for j in range(b_max):
-                if len(inflight) >= max(1, contexts):
-                    _wait_sent(inflight.pop(0))
-                inflight.append(round_fn(off, j))
-        for entry in inflight:
-            _wait_sent(entry)
+                window.push(round_fn(off, j))
+        window.drain()
 
     blk_elems = B * d_model                            # recv-sem units/block
     scl_elems = B                                      # scale-sem units/block
@@ -337,7 +232,7 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         blk = recv_q[pl.ds(row0, rows)]
         if wire_i8:
             blk = blk.astype(jnp.float32) * recv_s[pl.ds(row0, rows)]
-        h = swiglu_ffn(blk.astype(jnp.float32), w1_ref[...], w2_ref[...])
+        h = swiglu_ffn(blk.astype(jnp.float32), w1buf[...], w2buf[...])
         valid = (rel + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
                  < _lookup(counts, me))
         ffn_out.at[pl.ds(row0, rows)][...] = jnp.where(
@@ -357,7 +252,7 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         # the first tile computes while later peers are still in flight —
         # and its combine write goes out before the next tile's GEMM.
         ct = combine_tile          # sanitized by the sharded entry
-        inflight = []
+        window = make_window()
         for off in range(n):
             src = jax.lax.rem(me + off, n)             # source region
             for j in range(b_max):
@@ -376,11 +271,8 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
                     def tile(rel=j * B + t * ct):
                         ffn_tile(src, rel, ct)
                     pl.when(real)(tile) if elide_dummy else tile()
-                    if len(inflight) >= max(1, contexts):
-                        _wait_sent(inflight.pop(0))
-                    inflight.append(combine_round(off, j, t, ct))
-        for entry in inflight:
-            _wait_sent(entry)
+                    window.push(combine_round(off, j, t, ct))
+        window.drain()
     elif barrier or not pipelined:
         # BARRIER / DEFERRED: global rendezvous — drain every edge fully
         # (real + dummy blocks) before any expert compute starts.
@@ -463,6 +355,9 @@ def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
         scratch_shapes=[
+            pltpu.VMEM((T, d), x.dtype),                # staged x operand
+            pltpu.VMEM(w1.shape, w1.dtype),             # staged w1 operand
+            pltpu.VMEM(w2.shape, w2.dtype),             # staged w2 operand
             pltpu.VMEM((n * stride, d), wire_dt),       # send slab
             pltpu.VMEM((n * stride, 1), jnp.float32),   # send scales
             pltpu.VMEM((slab, d), wire_dt),             # recv slab (+trash)

@@ -19,9 +19,12 @@ def flash_attention(q, k, v, *, causal=True, q_block=128, kv_block=128,
 
 
 def ring_attention(q, k, v, mesh, *, axis="x", causal=True, pipelined=True,
-                   eager_wait=False):
+                   eager_wait=False, fused=False, counter=False,
+                   kv_chunk=None, contexts=2):
     fn = jax.jit(partial(_ring, mesh=mesh, axis=axis, causal=causal,
-                         pipelined=pipelined, eager_wait=eager_wait))
+                         pipelined=pipelined, eager_wait=eager_wait,
+                         fused=fused, counter=counter, kv_chunk=kv_chunk,
+                         contexts=contexts))
     return fn(q, k, v)
 
 
@@ -32,6 +35,9 @@ def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True,
     return fn(a_shards, b)
 
 
-def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True):
-    fn = jax.jit(partial(_kv, mesh=mesh, axis=axis, chained=chained))
+def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True, fused=False,
+               counter=False, kv_chunk=None, contexts=2):
+    fn = jax.jit(partial(_kv, mesh=mesh, axis=axis, chained=chained,
+                         fused=fused, counter=counter, kv_chunk=kv_chunk,
+                         contexts=contexts))
     return fn(x, wk, wv)

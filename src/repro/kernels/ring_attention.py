@@ -1,24 +1,41 @@
 """Fused ring flash-attention with device-initiated KV rotation
 (the paper's Flash Attention + Context Parallelism workload, §4.2/App. N,
-adapted to TPU Pallas remote DMA).
+adapted to TPU Pallas remote DMA) — realized against the shared
+collective-schedule contract (``repro.core.schedule.RingSchedule``).
 
 Each device owns one Q shard; KV shards rotate around the ring INSIDE the
-kernel via ``pltpu.make_async_remote_copy`` (the GIN-put analogue) with DMA
-semaphores (signal completion). The grid is (rounds, BH): rounds are
-sequential on TPU, so the double-buffered VMEM KV slots and the f32
-accumulators persist across rounds.
+kernel via ``pltpu.make_async_remote_copy`` (the GIN-put analogue). The
+kernel is a full trace-time unroll of the schedule's lockstep
+``(step, chunk)`` rounds — in rotation step ``s`` every rank ships the KV
+shard it currently holds one hop forward (rank ``r`` → ``(r+1) % n``, a
+shift permutation the legacy 0.4.x interpreter discharges in lockstep),
+split into ``kv_chunk``-row chunks staged in chunk-major VMEM double
+buffers.
 
-Placement realizations (design-space P):
-  TILE_PIPELINED — the send of the *current* KV block to the neighbour is
-    started at the top of round r (both source slot read-only for compute),
-    and the recv wait happens only at the start of round r+1: transfer fully
-    overlaps this round's attention compute.
-  DEFERRED      — the send is issued after the round's compute finishes and
-    is waited on immediately (sequential comm/compute — the fast-path
-    conservative shape, matching host-driven behaviour inside one kernel).
+Placement realizations (design-space P), all driven by the one schedule:
 
-Ordering realizations (O): ACQREL waits eagerly right after issuing (fully
-fenced), ACQUIRE/RELEASE/RELAXED defer the recv wait to the consuming round.
+  TILE_FUSED (+COUNTER = the FLUX point for rings) — chunk-major rounds:
+    chunk ``c``'s onward send issues the moment its arrival tick clears,
+    and the attention contribution of chunk ``c`` computes while chunk
+    ``c+1``'s rotation is still in flight. Per-chunk receive semaphores
+    tick arrivals off one chunk at a time; a ``contexts``-deep send window
+    bounds the in-flight chunk sends (replacing the old kernel's
+    eager/lazy-fence special cases). SIGNAL completion keeps the chunked
+    sends but drains all of a step's arrivals up front.
+  TILE_PIPELINED — one whole-shard round per step, issued at the top of
+    the round and fenced only after the round's compute (lazy fence:
+    transfer overlaps compute).
+  DEFERRED — the whole-shard round is awaited immediately (sequential
+    comm/compute, the host-driven shape inside one kernel). ACQREL
+    ordering forces the same eager fence on the pipelined path.
+
+Slot-reuse backpressure: step ``s``'s send writes the neighbour slot its
+step ``s-1`` compute read — the sender waits the downstream free-slot
+credit before issuing (``remote_semaphore_signal`` ACK after the consumer
+drains; degenerates to local bookkeeping under the legacy interpreter).
+
+Every DMA is issued unconditionally in the schedule's total order (the
+lockstep discharge rule); no ``pl.when`` wraps any ``dma.start()``.
 """
 from __future__ import annotations
 
@@ -32,165 +49,194 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import (interpret_params, remote_semaphore_signal,
                           shard_map, sync_copy,
                           compiler_params as tpu_compiler_params)
+from repro.core.schedule import (RingSchedule, SendWindow,  # noqa: F401
+                                 make_ring_schedule, sanitize_kv_chunk)
 
 NEG_INF = -1e30
 
 
-def _ring_kernel(q_ref, k_ref, v_ref, o_ref,
-                 kbuf, vbuf, acc, m_i, l_i,
+def _ring_kernel(q_ref, k_ref, v_ref, o_ref, kbuf, vbuf,
                  ksend, krecv, vsend, vrecv, credit,
-                 *, axis, causal, scale, pipelined, eager_wait, n_dev):
-    r = pl.program_id(0)
-    bh = pl.program_id(1)
-    n_bh = pl.num_programs(1)
+                 *, axis, sched: RingSchedule, causal, scale, counter,
+                 pipelined, eager_wait, contexts):
+    n, nc, cr = sched.n, sched.nc, sched.kv_chunk
+    fused = sched.fused
+    BH, Sl, hd = q_ref.shape
     me = jax.lax.axis_index(axis)
-    nxt = jax.lax.rem(me + 1, n_dev)
-    prv = jax.lax.rem(me - 1 + n_dev, n_dev)
-    cur = jax.lax.rem(r, 2)
-    sl = q_ref.shape[1]
+    nxt = jax.lax.rem(me + 1, n)
+    prv = jax.lax.rem(me - 1 + n, n)
+    chunk_elems = BH * cr * hd
 
-    @pl.when((r == 0) & (bh == 0))
-    def _load_local():
-        # round 0 uses the local KV shard: copy HBM -> VMEM slot 0
-        sync_copy(k_ref, kbuf.at[0])
-        sync_copy(v_ref, vbuf.at[0])
+    # local KV shard -> double-buffer slot 0 (k_ref/v_ref arrive chunk-major
+    # (nc, BH, cr, hd) from the sharded entry; kbuf rows [slot*nc + c])
+    for c in range(nc):
+        sync_copy(k_ref.at[c], kbuf.at[c])
+        sync_copy(v_ref.at[c], vbuf.at[c])
 
-    def _descs(slot_src, slot_dst):
-        kd = pltpu.make_async_remote_copy(
-            src_ref=kbuf.at[slot_src], dst_ref=kbuf.at[slot_dst],
-            send_sem=ksend, recv_sem=krecv, device_id=nxt,
-            device_id_type=pltpu.DeviceIdType.MESH)
-        vd = pltpu.make_async_remote_copy(
-            src_ref=vbuf.at[slot_src], dst_ref=vbuf.at[slot_dst],
-            send_sem=vsend, recv_sem=vrecv, device_id=nxt,
-            device_id_type=pltpu.DeviceIdType.MESH)
-        return kd, vd
+    q = q_ref[...].astype(jnp.float32)                 # (BH, Sl, hd)
+    acc = jnp.zeros((BH, Sl, hd), jnp.float32)
+    m_i = jnp.full((BH, Sl), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((BH, Sl), jnp.float32)
 
-    def _send(slot_src, slot_dst):
-        kd, vd = _descs(slot_src, slot_dst)
-        kd.start()
-        vd.start()
+    def chunk_dma(buf, ssem, rsem_slot, src_chunk, dst_chunk, nchunks):
+        """Ship kbuf/vbuf chunks [src_chunk, src_chunk+nchunks) one hop
+        forward into the neighbour's matching slot — a shift permutation."""
+        return pltpu.make_async_remote_copy(
+            src_ref=buf.at[pl.ds(src_chunk, nchunks)],
+            dst_ref=buf.at[pl.ds(dst_chunk, nchunks)],
+            send_sem=ssem, recv_sem=rsem_slot,
+            device_id=nxt, device_id_type=pltpu.DeviceIdType.MESH)
 
-    def _wait(slot_src, slot_dst):
-        kd, vd = _descs(slot_src, slot_dst)   # same sems/shapes: legal waiter
-        kd.wait()
-        vd.wait()
+    # contexts-deep send window over the trace-time round order (the shared
+    # schedule.SendWindow — a round's K/V pair counts as ONE entry): every
+    # DMA is issued unconditionally (lockstep rule), the window only bounds
+    # how many rounds' send semaphores stay unawaited. Drained at each step
+    # boundary (the slot-credit handshake needs the step's sends retired).
+    window = SendWindow(contexts)
 
-    # Rotation is always issued at the top of the round. TILE_PIPELINED
-    # defers the recv fence to the end of the round so the transfer overlaps
-    # this round's attention compute; DEFERRED (and eager orderings) wait
-    # immediately — zero overlap, comm strictly between compute rounds, the
-    # host-driven sequential shape. (Issuing the send *after* the compute
-    # block instead trips an XLA:CPU reshape bug on the legacy-interpreter
-    # lowering path, and is behaviourally identical for the zero-overlap
-    # realizations.)
-    # Backpressure: round r's send writes the neighbour slot its round
-    # r-1 compute read — wait for the neighbour's free-slot credit first.
-    @pl.when((bh == 0) & (r < n_dev - 1))
-    def _rotate():
-        @pl.when(r >= 1)
-        def _backpressure():
+    def issue(slot, c, nchunks):
+        kd = chunk_dma(kbuf, ksend, krecv.at[c], slot * nc + c,
+                       (1 - slot) * nc + c, nchunks)
+        vd = chunk_dma(vbuf, vsend, vrecv.at[c], slot * nc + c,
+                       (1 - slot) * nc + c, nchunks)
+        window.push([kd, vd])
+
+    def tick(c, nchunks):
+        """Receive-side readiness: chunk c of the in-flight rotation
+        landed (COUNTER consumes these one chunk at a time)."""
+        pltpu.semaphore_wait(krecv.at[c], nchunks * chunk_elems)
+        pltpu.semaphore_wait(vrecv.at[c], nchunks * chunk_elems)
+
+    def attend(s, c, acc, m_i, l_i):
+        """Flash-accumulate the attention contribution of chunk ``c`` of
+        the shard held at step ``s`` (originating rank (me - s) % n)."""
+        slot = s % 2
+        k_c = kbuf[slot * nc + c].astype(jnp.float32)  # (BH, cr, hd)
+        v_c = vbuf[slot * nc + c].astype(jnp.float32)
+        s_mat = jax.lax.dot_general(
+            q, k_c, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale  # (BH, Sl, cr)
+        if causal:
+            src_dev = jax.lax.rem(me - s + n, n)
+            qpos = me * Sl + jax.lax.broadcasted_iota(
+                jnp.int32, s_mat.shape, 1)
+            kpos = src_dev * Sl + c * cr + jax.lax.broadcasted_iota(
+                jnp.int32, s_mat.shape, 2)
+            s_mat = jnp.where(qpos >= kpos, s_mat, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s_mat, axis=2))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s_mat - m_new[:, :, None])
+        l_i = l_i * alpha + jnp.sum(p, axis=2)
+        acc = acc * alpha[:, :, None] + jax.lax.dot_general(
+            p, v_c, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_i
+
+    for s in range(n):                       # n compute rounds, n-1 rotations
+        slot = s % 2
+        rotate = s <= n - 2                  # step s ships slot s%2 onward
+        if rotate and s >= 1:
+            # step s's send overwrites the neighbour slot its step s-1
+            # compute read: wait the downstream free-slot credit first
             pltpu.semaphore_wait(credit, 1)
-        _send(cur, jax.lax.rem(r + 1, 2))
-        if eager_wait or not pipelined:
-            _wait(cur, jax.lax.rem(r + 1, 2))
+        if fused:
+            if not counter and s >= 1:
+                # SIGNAL: drain the whole step's arrivals up front
+                for c in range(nc):
+                    tick(c, 1)
+            for c in range(nc):
+                if counter and s >= 1:
+                    tick(c, 1)               # consume chunk c's arrival ...
+                if rotate:
+                    issue(slot, c, 1)        # ... ship it onward (windowed)
+                acc, m_i, l_i = attend(s, c, acc, m_i, l_i)
+            window.drain()
+        else:
+            if rotate:
+                issue(slot, 0, nc)           # one whole-shard round
+                if eager_wait or not pipelined:
+                    window.drain()           # DEFERRED/ACQREL: fully fenced
+                    tick(0, nc)
+            for c in range(nc):
+                acc, m_i, l_i = attend(s, c, acc, m_i, l_i)
+            if rotate and pipelined and not eager_wait:
+                window.drain()           # lazy fence: after the compute
+                tick(0, nc)
+        if s <= n - 3:
+            # slot s%2 fully consumed (compute done, outgoing sends
+            # retired): upstream's next-next send may reuse it
+            remote_semaphore_signal(credit, 1, device_id=prv,
+                                    device_id_type=pltpu.DeviceIdType.MESH)
 
-    # ---- compute this round's attention tile (flash accumulate) ----
-    @pl.when(r == 0)
-    def _init():
-        acc[bh] = jnp.zeros_like(acc[bh])
-        m_i[bh] = jnp.full_like(m_i[bh], NEG_INF)
-        l_i[bh] = jnp.zeros_like(l_i[bh])
-
-    src_dev = jax.lax.rem(me - r + n_dev, n_dev)     # whose KV we hold now
-    q = q_ref[bh].astype(jnp.float32)                # (Sl, hd)
-    k = kbuf[cur, bh].astype(jnp.float32)
-    v = vbuf[cur, bh].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if causal:
-        qpos = me * sl + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        kpos = src_dev * sl + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(qpos >= kpos, s, NEG_INF)
-    m_prev = m_i[bh]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    l_i[bh] = l_i[bh] * alpha + jnp.sum(p, axis=1)
-    acc[bh] = acc[bh] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_i[bh] = m_new
-
-    if pipelined and not eager_wait:
-        # lazy ordering: block round r+1 until the rotated KV landed
-        @pl.when((bh == n_bh - 1) & (r < n_dev - 1))
-        def _fence():
-            _wait(cur, jax.lax.rem(r + 1, 2))
-
-    # Compute on slot r%2 is done AND our outgoing DMA reading it has been
-    # waited (the fence above ran): tell the upstream device its next-next
-    # send may now reuse this slot. Must come after the waits — an ACK before
-    # wait_send would let upstream overwrite a slot our DMA is still reading.
-    @pl.when((bh == n_bh - 1) & (r <= n_dev - 3))
-    def _ack_upstream():
-        remote_semaphore_signal(credit, 1, device_id=prv,
-                                device_id_type=pltpu.DeviceIdType.MESH)
-
-    @pl.when(r == n_dev - 1)
-    def _finish():
-        o_ref[bh] = (acc[bh] / jnp.maximum(l_i[bh], 1e-30)[:, None]
-                     ).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, :, None]
+                  ).astype(o_ref.dtype)
 
 
 def ring_attention_sharded(q, k, v, *, axis, n_dev, causal=True,
-                           pipelined=True, eager_wait=False, interpret=None):
-    """Per-device fn (call under shard_map). q/k/v: (BH, Sl, hd) local."""
+                           sched: RingSchedule = None, kv_chunk=None,
+                           fused=False, counter=False, pipelined=True,
+                           eager_wait=False, contexts=2, interpret=None):
+    """Per-device fn (call under shard_map). q/k/v: (BH, Sl, hd) local.
+    An explicit ``sched`` takes precedence: the ``kv_chunk``/``fused``
+    knobs are consulted only to build one when ``sched`` is None."""
     BH, Sl, hd = q.shape
     scale = 1.0 / math.sqrt(hd)
-    kern = functools.partial(_ring_kernel, axis=axis, causal=causal,
-                             scale=scale, pipelined=pipelined,
-                             eager_wait=eager_wait, n_dev=n_dev)
+    if sched is None:
+        sched = make_ring_schedule(n_dev, Sl, kv_chunk or Sl, fused)
+    assert sched.n == n_dev and sched.rows == Sl, (sched, n_dev, Sl)
+    nc, cr = sched.nc, sched.kv_chunk
+    # chunk-major staging: the kernel's KV buffers (and rotation DMAs)
+    # address whole chunks through a single leading index
+    kc = k.reshape(BH, nc, cr, hd).swapaxes(0, 1)
+    vc = v.reshape(BH, nc, cr, hd).swapaxes(0, 1)
+    kern = functools.partial(_ring_kernel, axis=axis, sched=sched,
+                             causal=causal, scale=scale, counter=counter,
+                             pipelined=pipelined, eager_wait=eager_wait,
+                             contexts=contexts)
     ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
-        grid=(n_dev, BH),
         in_specs=[
-            pl.BlockSpec((BH, Sl, hd), lambda r, bh: (0, 0, 0)),  # q in VMEM
-            pl.BlockSpec(memory_space=pl.ANY),                 # k (HBM)
-            pl.BlockSpec(memory_space=pl.ANY),                 # v (HBM)
+            pl.BlockSpec((BH, Sl, hd), lambda: (0, 0, 0)),  # q in VMEM
+            pl.BlockSpec(memory_space=pl.ANY),              # k chunks (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),              # v chunks (HBM)
         ],
-        out_specs=pl.BlockSpec((BH, Sl, hd), lambda r, bh: (0, 0, 0)),
+        out_specs=pl.BlockSpec((BH, Sl, hd), lambda: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sl, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((2, BH, Sl, hd), q.dtype),    # K double buffer
-            pltpu.VMEM((2, BH, Sl, hd), q.dtype),    # V double buffer
-            pltpu.VMEM((BH, Sl, hd), jnp.float32),   # acc
-            pltpu.VMEM((BH, Sl), jnp.float32),       # m
-            pltpu.VMEM((BH, Sl), jnp.float32),       # l
-            pltpu.SemaphoreType.DMA,                 # k send
-            pltpu.SemaphoreType.DMA,                 # k recv
-            pltpu.SemaphoreType.DMA,                 # v send
-            pltpu.SemaphoreType.DMA,                 # v recv
-            pltpu.SemaphoreType.REGULAR,             # free-slot credit
+            pltpu.VMEM((2 * nc, BH, cr, hd), q.dtype),  # K double buffer
+            pltpu.VMEM((2 * nc, BH, cr, hd), q.dtype),  # V double buffer
+            pltpu.SemaphoreType.DMA,                    # k send
+            pltpu.SemaphoreType.DMA((nc,)),             # k per-chunk recv
+            pltpu.SemaphoreType.DMA,                    # v send
+            pltpu.SemaphoreType.DMA((nc,)),             # v per-chunk recv
+            pltpu.SemaphoreType.REGULAR,                # free-slot credit
         ],
         interpret=ip,
         compiler_params=tpu_compiler_params(collective_id=7),
-    )(q, k, v)
+    )(q, kc, vc)
 
 
-def ring_attention(q, k, v, mesh, *, axis="x", causal=True, pipelined=True,
-                   eager_wait=False):
-    """Global entry: q/k/v (n_dev, BH, Sl, hd) sharded on dim 0 over `axis`."""
+def ring_attention(q, k, v, mesh, *, axis="x", causal=True, kv_chunk=None,
+                   fused=False, counter=False, pipelined=True,
+                   eager_wait=False, contexts=2):
+    """Global entry: q/k/v (n_dev, BH, Sl, hd) sharded on dim 0 over `axis`.
+    ``fused``+``counter`` selects the chunk-rotating FLUX-ring path
+    (``kv_chunk`` rows per rotation round, sanitized to a divisor of Sl)."""
     from jax.sharding import PartitionSpec as P
     n_dev = mesh.shape[axis]
+    sched = make_ring_schedule(n_dev, q.shape[2],
+                               kv_chunk or (q.shape[2] if not fused else 64),
+                               fused)
 
     @functools.partial(shard_map, mesh=mesh, in_specs=P(axis),
                        out_specs=P(axis), check_vma=False)
     def run(qs, ks, vs):
         out = ring_attention_sharded(qs[0], ks[0], vs[0], axis=axis,
-                                     n_dev=n_dev, causal=causal,
-                                     pipelined=pipelined,
-                                     eager_wait=eager_wait)
+                                     n_dev=n_dev, causal=causal, sched=sched,
+                                     counter=counter, pipelined=pipelined,
+                                     eager_wait=eager_wait,
+                                     contexts=contexts)
         return out[None]
 
     return run(q, k, v)

@@ -6,7 +6,16 @@ A workload exposes:
                           strictly sequenced; what a user writes before
                           device-initiated redesign),
   * ``build(directive)``— the directive-realized implementation (the bounded
-                          operator's output), and
+                          operator's output),
+  * ``kernel_knobs``    — the single directive→kernel-knob mapping both
+                          ``build()`` and ``analytic_cost()`` consult for
+                          the kernelized (PALLAS_RDMA/HYBRID) points: the
+                          search contract of docs/kernels.md. The base
+                          default maps every ``default_tunables()`` entry
+                          (directive tunables win — the grids live in
+                          ``design_space.TUNABLES``) plus the shared
+                          ``contexts`` dimension; workloads override to add
+                          their placement/completion realizations, and
   * ``analytic_cost``   — the l3 roofline model of one step at the paper's
                           full deployment shape (this container is CPU-only,
                           so empirical latency is replaced by a v5e roofline
@@ -76,3 +85,17 @@ class Workload:
 
     def default_tunables(self):
         return {}
+
+    # --- the search contract (docs/kernels.md) ---
+    def kernel_knobs(self, d: Directive) -> dict:
+        """Directive → kernel-knob mapping, shared by ``build()`` and
+        ``analytic_cost()`` so the two can never drift. The base default
+        resolves every default tunable against the directive (raw values:
+        consumers sanitize shape-dependent knobs at their own boundary via
+        ``core/schedule.py::sanitize_tile``) plus the ``contexts``
+        send-window depth. Overrides call ``super().kernel_knobs(d)`` and
+        add their realization knobs."""
+        k = {name: d.tunable(name, default)
+             for name, default in self.default_tunables().items()}
+        k["contexts"] = max(1, int(d.contexts))
+        return k

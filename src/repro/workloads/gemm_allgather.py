@@ -13,10 +13,11 @@ Both run the same trace-time ``BroadcastSchedule`` under a ``contexts``-deep
 send window. The XLA STREAM_SPLIT build chunks the GEMM and all-gathers
 chunk c while chunk c+1 computes.
 
-``_kernel_knobs`` is the single directive→knob mapping both ``build()`` and
-``analytic_cost()`` consult (the search contract, docs/kernels.md); the
-``tile_m`` tunable is drawn from the central ``TUNABLES`` grid and sanitized
-to a divisor of the local slab at each shape boundary.
+``kernel_knobs`` (the ``Workload`` protocol's search contract) is the
+single directive→knob mapping both ``build()`` and ``analytic_cost()``
+consult (docs/kernels.md); the ``tile_m`` tunable is drawn from the central
+``TUNABLES`` grid and sanitized to a divisor of the local slab at each
+shape boundary.
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cost_model import per_tile_exposed_s
+from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
 from repro.core.design_space import Directive
 from repro.kernels.gemm_allgather import (gemm_allgather as ga_kernel,
                                           make_broadcast_schedule,
@@ -96,20 +97,24 @@ class GemmAllGather(Workload):
         return run
 
     # directive -> kernel-knob mapping shared by build() and analytic_cost()
-    @staticmethod
-    def _kernel_knobs(d: Directive, M_l):
-        return dict(
+    # (the Workload.kernel_knobs search contract, docs/kernels.md)
+    def kernel_knobs(self, d: Directive, M_l=None):
+        k = super().kernel_knobs(d)      # tunables (raw) + contexts
+        if M_l is None:
+            M_l = self.M // self.n_dev   # the deployment slab (l3 model)
+        k.update(
             # the TUNABLES grid need not divide a given local slab — the
             # kernel contract requires an exact divisor, so sanitize here
             # (a slow-path diff patch must never crash the evaluator)
-            tile_m=sanitize_tile_m(d.tunable("tile_m", 128), M_l),
+            tile_m=sanitize_tile_m(k["tile_m"], M_l),
             # BARRIER forces the deferred whole-slab drain even under a
-            # TILE_FUSED placement (mirrors moe_dispatch._kernel_knobs)
+            # TILE_FUSED placement (mirrors moe_dispatch.kernel_knobs)
             fused=(d.placement in ("TILE_FUSED", "TILE_PIPELINED")
                    and d.completion != "BARRIER"),
             # COUNTER = per-tile arrival ticks (the FLUX point); SIGNAL
             # keeps per-tile issue but waits once per inbound edge
             counter=d.completion == "COUNTER")
+        return k
 
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":
@@ -118,10 +123,10 @@ class GemmAllGather(Workload):
             return self.host_baseline(mesh)
 
         def run(a, b):
-            k = self._kernel_knobs(d, a.shape[1])
+            k = self.kernel_knobs(d, a.shape[1])
             return ga_kernel(a, b, mesh, axis=self.axis, tile_m=k["tile_m"],
                              fused=k["fused"], counter=k["counter"],
-                             contexts=int(d.contexts))
+                             contexts=k["contexts"])
 
         return run
 
@@ -149,7 +154,7 @@ class GemmAllGather(Workload):
         # kernelized (PALLAS_RDMA / HYBRID): one fused launch; the schedule
         # charges TILE_SYNC per issued broadcast round and per completion
         # tick — same accounting shape as the moe_dispatch kernel model.
-        k = self._kernel_knobs(d, M_l)
+        k = self.kernel_knobs(d, M_l)
         sched = make_broadcast_schedule(n, M_l, k["tile_m"], k["fused"])
         ticks = sched.completion_ticks(k["counter"])
         if d.completion == "BARRIER":
@@ -169,7 +174,7 @@ class GemmAllGather(Workload):
             # the oldest send drains before the next round may issue.
             per_gemm = t_gemm / max(1, sched.nt)
             span = max(t_gemm, per_gemm + t_wire)
-            window = 1.0 + 1.0 / max(1, int(d.contexts))
+            window = window_stall_factor(k["contexts"])
             return span + window * per_tile_exposed_s(
                 wire, hw.chip.ici_link_bw, sched.issued_rounds()) + fixed
         # DEFERRED slab path: comm strictly after compute; the window

@@ -5,10 +5,20 @@ Host baseline: the prefill rank computes K and V projections, then a single
 host-sequenced transfer moves both — the network idles during compute and
 compute idles during the transfer (the compute-to-send gap).
 
-Device-initiated build: the chained kernel (repro.kernels.kv_shuttle) —
-K GEMM -> start K send -> V GEMM (overlapping K's flight) -> V send+signal;
-the decode rank waits on-device. XLA STREAM_SPLIT build: two independent
+Device-initiated builds (repro.kernels.kv_shuttle, realized against the
+shared ``core/schedule.py::RingSchedule`` — the n=2 degenerate ring): the
+chained kernel — K GEMM -> start K send -> V GEMM (overlapping K's flight)
+-> V send+signal — and the TILE_FUSED + COUNTER point (the FLUX point for
+the shuttle): ``kv_chunk``-row K/V GEMM tiles whose sends issue the moment
+each tile is ready, under a ``contexts``-deep send window, with the decode
+rank ticking arrivals off one chunk at a time. The decode rank waits
+entirely on-device either way. XLA STREAM_SPLIT build: two independent
 ppermute chains let XLA overlap K's transfer with V's GEMM at graph level.
+
+``kernel_knobs`` (the ``Workload`` protocol's search contract) is the
+single directive→knob mapping both ``build()`` and ``analytic_cost()``
+consult; the ``chained`` and ``kv_chunk`` tunables are refinable by the
+slow path's diff patches (``TUNABLES`` grids).
 """
 from __future__ import annotations
 
@@ -18,9 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
 from repro.core.design_space import Directive
+from repro.core.schedule import make_ring_schedule
 from repro.kernels.kv_shuttle import kv_shuttle as shuttle_kernel
-from repro.workloads.base import (KERNEL_LAUNCH, SIGNAL_OVERHEAD,
+from repro.workloads.base import (KERNEL_LAUNCH, SIGNAL_OVERHEAD, TILE_SYNC,
                                   BARRIER_OVERHEAD, Workload, register)
 from repro.compat import shard_map
 
@@ -93,19 +105,47 @@ class KVTransfer(Workload):
 
         return run
 
+    # directive -> kernel-knob mapping shared by build() and analytic_cost()
+    # (the Workload.kernel_knobs search contract, docs/kernels.md)
+    def kernel_knobs(self, d: Directive):
+        k = super().kernel_knobs(d)      # chained/kv_chunk (raw) + contexts
+        fused = (d.placement == "TILE_FUSED" and d.completion != "BARRIER")
+        # the K→V signal chain: placement decides the default (BARRIER
+        # forces the conservative sequential shape, like every other
+        # workload's BARRIER override), and the `chained` tunable lets a
+        # diff patch flip it in place. None (the seeded default) means
+        # "unset" — fast_path seeds directives with default_tunables, and
+        # a stored None must not shadow the placement-derived default.
+        ch = k["chained"]
+        if ch is None:
+            ch = (d.placement in ("STREAM_SPLIT", "TILE_PIPELINED",
+                                  "TILE_FUSED")
+                  and d.ordering != "ACQREL" and d.completion != "BARRIER")
+        k.update(
+            # per-tile fused K/V GEMM + send chain (the shuttle FLUX point)
+            fused=fused,
+            counter=(d.completion == "COUNTER" and fused),
+            chained=bool(ch))
+        return k
+
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 return self._stream_split(mesh)
             return self.host_baseline(mesh)
-        chained = d.placement in ("STREAM_SPLIT", "TILE_PIPELINED",
-                                  "TILE_FUSED") and d.ordering != "ACQREL"
+        k = self.kernel_knobs(d)
 
         def run(x, wk, wv):
             return shuttle_kernel(x, wk, wv, mesh, axis=self.axis,
-                                  chained=chained)
+                                  chained=k["chained"], fused=k["fused"],
+                                  counter=k["counter"],
+                                  kv_chunk=k["kv_chunk"],
+                                  contexts=k["contexts"])
 
         return run
+
+    def default_tunables(self):
+        return {"chained": None, "kv_chunk": 64}
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
@@ -113,8 +153,6 @@ class KVTransfer(Workload):
         t_gemm = 2.0 * T * dd * dk / hw.chip.peak_bf16_flops
         t_send = T * dk * 2 / hw.chip.ici_link_bw
         sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
-        chained = d.placement in ("STREAM_SPLIT", "TILE_PIPELINED",
-                                  "TILE_FUSED") and d.ordering != "ACQREL"
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 # K send overlaps V GEMM; V send exposed
@@ -122,6 +160,21 @@ class KVTransfer(Workload):
                         + 2 * KERNEL_LAUNCH)
             # bundled: both GEMMs then one 2x transfer
             return 2 * t_gemm + 2 * t_send + sync + 2 * KERNEL_LAUNCH
-        if chained:
+        k = self.kernel_knobs(d)
+        if k["fused"]:
+            # shuttle FLUX credit: tile c's send hides behind tile c+1's
+            # GEMM; only the startup tile and the final exposed tail (per
+            # chunk, scaled by the window recycle stall) stay serial. The
+            # schedule charges TILE_SYNC per issued round and per tick.
+            sched = make_ring_schedule(2, T, k["kv_chunk"], fused=True)
+            startup = 2 * t_gemm / sched.nc
+            span = max(2 * t_gemm, startup + 2 * t_send)
+            exposed = window_stall_factor(k["contexts"]) \
+                * per_tile_exposed_s(2 * T * dk * 2, hw.chip.ici_link_bw,
+                                     sched.nc)
+            fixed = (sched.issued_rounds()
+                     + sched.completion_ticks(k["counter"])) * TILE_SYNC
+            return span + exposed + fixed + KERNEL_LAUNCH
+        if k["chained"]:
             return t_gemm + max(t_send, t_gemm) + t_send + sync + KERNEL_LAUNCH
         return 2 * t_gemm + 2 * t_send + sync + KERNEL_LAUNCH

@@ -37,7 +37,9 @@ FFN as a tiled GEMM loop inside the same kernel: dispatch arrivals are
 consumed one microblock at a time and each `combine_tile`-row output tile's
 combine remote-DMA is issued the moment the tile is ready — per-tile
 counter ticks instead of per-edge signals. Both kernelized points share
-the `block_tokens`/`contexts`/`combine_tile` knobs the slow path refines.
+the `block_tokens`/`contexts`/`combine_tile` knobs the slow path refines;
+``kernel_knobs`` (the ``Workload`` protocol's search contract) is the
+single directive→knob mapping both build() and analytic_cost() consult.
 """
 from __future__ import annotations
 
@@ -54,7 +56,7 @@ from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
 from repro.compat import shard_map
-from repro.core.cost_model import per_tile_exposed_s
+from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
 from repro.kernels.moe_dispatch import make_schedule, quant_i8, swiglu_ffn
 
 
@@ -175,29 +177,32 @@ class MoEDispatch(Workload):
         return self._make(mesh, overlap=False, wire_i8=False)
 
     # directive -> kernel-knob mapping shared by build() and analytic_cost()
-    @staticmethod
-    def _kernel_knobs(d: Directive):
-        B = max(1, int(d.tunable("block_tokens", 64)))
-        return dict(
+    # (the Workload.kernel_knobs search contract, docs/kernels.md)
+    def kernel_knobs(self, d: Directive):
+        k = super().kernel_knobs(d)      # tunables (raw) + contexts
+        B = max(1, int(k["block_tokens"]))
+        k.update(
             block_tokens=B,
             # PER_TILE (the FLUX coordinate) quantizes to microblocks too —
             # both per-peer and per-tile edges carry exact token counts
             tight=(d.granularity in ("PER_PEER", "PER_TILE")
-                   and bool(d.tunable("tight", 1))),
+                   and bool(k["tight"])),
             # BARRIER forces the global-rendezvous shape even under a
             # TILE_FUSED placement; COUNTER/SIGNAL fuse the combine loop
             tile_fused=(d.placement == "TILE_FUSED"
                         and d.completion != "BARRIER"),
-            # raw knob value: the sharded kernel entry and the schedule's
-            # combine_ticks each sanitize at their own boundary
+            # combine_tile stays raw (default: one tile per microblock) —
+            # the sharded kernel entry and the schedule's combine_ticks
+            # each sanitize at their own boundary
             combine_tile=d.tunable("combine_tile", B),
             pipelined=d.placement in ("TILE_FUSED", "TILE_PIPELINED",
                                       "STREAM_SPLIT"),
             barrier=d.completion == "BARRIER")
+        return k
 
     def _make_kernel(self, mesh, d: Directive):
         from repro.kernels.moe_dispatch import moe_dispatch_combine
-        k = self._kernel_knobs(d)
+        k = self.kernel_knobs(d)
 
         def run(x, w1, w2):
             return moe_dispatch_combine(
@@ -206,8 +211,7 @@ class MoEDispatch(Workload):
                 block_tokens=k["block_tokens"], tight=k["tight"],
                 pipelined=k["pipelined"], barrier=k["barrier"],
                 tile_fused=k["tile_fused"], combine_tile=k["combine_tile"],
-                contexts=int(d.contexts),
-                wire_i8=bool(d.tunable("wire_i8", 0)))
+                contexts=k["contexts"], wire_i8=bool(k["wire_i8"]))
 
         return run
 
@@ -227,7 +231,7 @@ class MoEDispatch(Workload):
         counts = self._counts(T)
         C = int(counts.max())
         kernel = d.backend in ("PALLAS_RDMA", "HYBRID")
-        k = self._kernel_knobs(d) if kernel else None
+        k = self.kernel_knobs(d) if kernel else None
         tight = k["tight"] if kernel \
             else bool(d.granularity == "PER_PEER" and d.tunable("tight", 1))
         wire_i8 = bool(d.tunable("wire_i8", 0))
@@ -282,7 +286,7 @@ class MoEDispatch(Workload):
                 # oldest send drains before the next tile may issue.
                 startup = t_disp / max(1, disp_rounds)
                 span = max(t_disp, startup + t_comp)
-                window = 1.0 + 1.0 / max(1, int(d.contexts))
+                window = window_stall_factor(k["contexts"])
                 return span + window * per_tile_exposed_s(
                     sent * dm * 2, hw.chip.ici_link_bw, ticks) + fixed
             pipelined = (d.placement in ("TILE_PIPELINED", "STREAM_SPLIT")

@@ -6,9 +6,20 @@ result, forcing strictly sequential execution (the paper's Figure 7 host
 timeline: exchange / compute / exchange / …).
 
 Device-initiated builds rotate KV *inside* a Pallas kernel via remote DMA
-(repro.kernels.ring_attention) with deferred or per-tile-pipelined placement.
-An XLA STREAM_SPLIT build double-buffers the permute at graph level so XLA's
-async collective scheduler can overlap it with the round's compute.
+(repro.kernels.ring_attention), realized against the shared
+``core/schedule.py::RingSchedule``: DEFERRED rotates whole shards and
+fences eagerly, TILE_PIPELINED overlaps the rotation with the round's
+compute (lazy fence), and TILE_FUSED + COUNTER (the FLUX point for rings)
+rotates ``kv_chunk``-row chunks under a ``contexts``-deep send window with
+per-chunk arrival ticks — chunk c's attention computes while chunk c+1 is
+still in flight. An XLA STREAM_SPLIT build double-buffers the permute at
+graph level so XLA's async collective scheduler can overlap it with the
+round's compute.
+
+``kernel_knobs`` (the ``Workload`` protocol's search contract) is the
+single directive→knob mapping both ``build()`` and ``analytic_cost()``
+consult; ``kv_chunk`` is drawn from the central ``TUNABLES`` grid and
+sanitized to a divisor of the local KV shard at each shape boundary.
 
 Full deployment shape (paper §4.2): 4 devices, SEQ in {4096, 8192},
 HD in {32, 64}, GPT-2-ish multi-head layout.
@@ -22,7 +33,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
 from repro.core.design_space import Directive
+from repro.core.schedule import make_ring_schedule
 from repro.kernels.ref import flash_attention_ref, ring_attention_ref
 from repro.kernels.ring_attention import ring_attention as ring_kernel
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
@@ -133,19 +146,47 @@ class RingAttention(Workload):
 
         return run
 
+    # directive -> kernel-knob mapping shared by build() and analytic_cost()
+    # (the Workload.kernel_knobs search contract, docs/kernels.md)
+    def kernel_knobs(self, d: Directive):
+        k = super().kernel_knobs(d)      # kv_chunk (raw) + contexts
+        fused = (d.placement == "TILE_FUSED" and d.completion != "BARRIER")
+        k.update(
+            # chunk-major rotation rounds (the FLUX-ring path); BARRIER
+            # forces the whole-shard eager drain even under TILE_FUSED
+            fused=fused,
+            # COUNTER = per-chunk arrival ticks; SIGNAL drains a step's
+            # chunks up front (per-edge wait, chunked issue)
+            counter=(d.completion == "COUNTER" and fused),
+            # lazy fence: the whole-shard rotation overlaps the round's
+            # compute; ACQREL orders the fence eagerly, and BARRIER's
+            # global-rendezvous semantics force the same serialized drain
+            pipelined=d.placement in ("TILE_PIPELINED", "TILE_FUSED"),
+            eager=((d.ordering == "ACQREL" or d.completion == "BARRIER")
+                   and not fused))
+        return k
+
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 return self._stream_split(mesh)
             return self.host_baseline(mesh)
-        pipelined = d.placement in ("TILE_PIPELINED", "TILE_FUSED")
-        eager = d.ordering == "ACQREL" or d.placement == "TILE_FUSED"
+        k = self.kernel_knobs(d)
 
-        def run(q, k, v):
-            return ring_kernel(q, k, v, mesh, axis=self.axis, causal=True,
-                               pipelined=pipelined, eager_wait=eager)
+        def run(q, k_in, v_in):
+            return ring_kernel(q, k_in, v_in, mesh, axis=self.axis,
+                               causal=True, fused=k["fused"],
+                               counter=k["counter"], kv_chunk=k["kv_chunk"],
+                               pipelined=k["pipelined"],
+                               eager_wait=k["eager"],
+                               contexts=k["contexts"])
 
         return run
+
+    def default_tunables(self):
+        # kv_chunk joins the TUNABLES grid: slow-path diff patches refine
+        # the rotation chunk rows of the kernelized ring points
+        return {"kv_chunk": 64}
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
@@ -163,12 +204,24 @@ class RingAttention(Workload):
                 per_round = t_comp + t_wire + sync + KERNEL_LAUNCH
             return n * per_round + KERNEL_LAUNCH * n   # per-round host launches
         # Pallas device-initiated: no host launches inside the ring
-        if d.placement in ("TILE_PIPELINED",):
-            per_round = max(t_comp, t_wire) + sync
-            if d.ordering == "ACQREL":                 # eager fences serialize
-                per_round = t_comp + t_wire + sync
-        elif d.placement == "TILE_FUSED":
-            per_round = max(t_comp, t_wire) + TILE_SYNC * BH + sync
-        else:                                          # DEFERRED in-kernel
+        k = self.kernel_knobs(d)
+        if k["fused"]:
+            # FLUX-ring credit: chunk c's rotation hides behind chunk c+1's
+            # attention compute; per rotation step only the final chunk's
+            # wire stays exposed (per_tile_exposed_s over the chunk count),
+            # scaled by the send-window recycle stall. The schedule charges
+            # TILE_SYNC per issued round and per completion tick.
+            sched = make_ring_schedule(n, sl, k["kv_chunk"], fused=True)
+            per_round = max(t_comp, t_wire)
+            exposed = window_stall_factor(k["contexts"]) \
+                * per_tile_exposed_s(wire_round, hw.chip.ici_link_bw,
+                                     sched.nc)
+            fixed = (sched.issued_rounds()
+                     + sched.completion_ticks(k["counter"])) * TILE_SYNC
+            return sched.steps * (per_round + exposed) + t_comp + fixed \
+                + KERNEL_LAUNCH
+        if k["pipelined"] and not k["eager"]:
+            per_round = max(t_comp, t_wire) + sync     # lazy fence overlap
+        else:                                          # DEFERRED / ACQREL
             per_round = t_comp + t_wire + sync
         return n * per_round + KERNEL_LAUNCH           # one cooperative launch

@@ -12,7 +12,10 @@ hw = extract_hardware_context(mesh)
 
 for wname, kw in [("gemm_allgather", dict(n_dev=4, M=4096, K=4096, N=4096)),
                   ("moe_dispatch", dict(n_dev=4, tokens_per_rank=512, d=128,
-                                        f=256, skew=3.0))]:
+                                        f=256, skew=3.0)),
+                  # ring workload: the search refines the kernelized ring
+                  # points through the kv_chunk/contexts tunables
+                  ("ring_attention", dict(n_dev=4, BH=4, seq=512, hd=64))]:
     w = get_workload(wname, **kw)
     seed = fast_path(w, mesh, hw)
     assert seed.candidate.result.ok

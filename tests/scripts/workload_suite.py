@@ -66,6 +66,9 @@ check("kv_transfer", mesh2, [
     D("PALLAS_RDMA", "SIGNAL", "STREAM_SPLIT"),
     D("PALLAS_RDMA", "SIGNAL", "DEFERRED"),
     D("PALLAS_RDMA", "SIGNAL", "STREAM_SPLIT", ordering="ACQREL"),
+    # per-tile fused K/V GEMM + send chain (the FLUX shuttle point)
+    D("PALLAS_RDMA", "COUNTER", "TILE_FUSED", granularity="PER_TILE",
+      contexts=2).with_tunable("kv_chunk", 32),
 ])
 
 check("gemm_allgather", mesh4, [

@@ -99,15 +99,19 @@ def test_flux_point_beats_host_and_deferred():
 
 
 def test_build_and_cost_share_knob_mapping():
-    """_kernel_knobs is the single directive->knob mapping: BARRIER forces
-    the deferred drain even under TILE_FUSED, COUNTER marks per-tile
-    ticks, and tile_m is sanitized to a divisor of the local slab."""
+    """kernel_knobs (the Workload protocol's search contract) is the
+    single directive->knob mapping: BARRIER forces the deferred drain even
+    under TILE_FUSED, COUNTER marks per-tile ticks, and tile_m is
+    sanitized to a divisor of the local slab (the deployment slab when no
+    shape is passed)."""
     w = ga()
-    k = w._kernel_knobs(FLUX, 1024)
-    assert k == {"tile_m": 128, "fused": True, "counter": True}
+    k = w.kernel_knobs(FLUX, 1024)
+    assert k["tile_m"] == 128 and k["fused"] and k["counter"]
+    assert k["contexts"] == FLUX.contexts
+    assert w.kernel_knobs(FLUX)["tile_m"] == 128       # M = 4096, n = 4
     barrier = dataclasses.replace(FLUX, completion="BARRIER")
-    assert not w._kernel_knobs(barrier, 1024)["fused"]
-    assert w._kernel_knobs(FLUX.with_tunable("tile_m", 96), 128)["tile_m"] \
+    assert not w.kernel_knobs(barrier, 1024)["fused"]
+    assert w.kernel_knobs(FLUX.with_tunable("tile_m", 96), 128)["tile_m"] \
         == 64
 
 

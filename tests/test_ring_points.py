@@ -1,0 +1,285 @@
+"""Ring-workload expert-point validity + ring-rotation schedule cost
+accounting (the analog of test_collective_points.py for the two ring
+workloads: ring_attention and kv_transfer).
+
+These run without hypothesis and without simulated devices (the 1-rank
+cascade smoke uses the default 1-device jax): directive validity and the l3
+analytic model are pure functions. The executable 4-rank interpret-mode
+counterparts live in tests/scripts/ring_kernel_suite.py.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
+from repro.core.design_space import EXPERT_SYSTEMS, TUNABLES, Directive
+from repro.core.hardware import V5E, HardwareContext
+from repro.workloads import get_workload
+
+HW = HardwareContext(chip=V5E, mesh_shape=(4,), mesh_axes=("x",),
+                     chips_per_pod=4, n_chips=4, has_dcn=False)
+
+FLUX = EXPERT_SYSTEMS["FLUX"]
+HOST = Directive("XLA_COLLECTIVE", placement="DEFERRED")
+PIPELINED = Directive("PALLAS_RDMA", "SIGNAL", "TILE_PIPELINED", "LOCAL",
+                      "GRID_STEP", "PER_TILE", "ACQUIRE", 2)
+DEFERRED_KERNEL = Directive("PALLAS_RDMA", "SIGNAL", "DEFERRED", "LOCAL",
+                            "KERNEL", "PER_PEER", "RELEASE", 2)
+
+
+def ring(**kw):
+    kw.setdefault("n_dev", 4)
+    kw.setdefault("BH", 96)
+    kw.setdefault("seq", 4096)
+    kw.setdefault("hd", 64)
+    return get_workload("ring_attention", **kw)
+
+
+def kvt(**kw):
+    return get_workload("kv_transfer", **kw)
+
+
+def test_ring_workloads_are_kernelizable():
+    assert ring().kernelizable and ring().traits(HW)["ring_topology"]
+    assert kvt().kernelizable and not kvt().traits(HW)["ring_topology"]
+
+
+def test_expert_points_valid_for_ring_workloads():
+    """Every Table-3 expert directive validates under both ring-workload
+    traits — in particular FLUX (TILE_FUSED + COUNTER + PER_TILE), the
+    point the chunk-rotating kernels realize."""
+    for w in (ring(), kvt()):
+        for name, d in EXPERT_SYSTEMS.items():
+            v = w.check(d, HW)
+            assert not v, (w.name, name, v)
+        assert not w.check(DEFERRED_KERNEL, HW)
+    # the ring-topology bound still rejects PER_PEER fused exchanges
+    bad = dataclasses.replace(FLUX, granularity="PER_PEER")
+    assert ring().check(bad, HW)
+
+
+# --------------------------------------------------- ring-rotation schedule
+
+def test_ring_schedule_shapes():
+    from repro.core.schedule import make_ring_schedule
+
+    fused = make_ring_schedule(4, 1024, 64, fused=True)
+    assert fused.steps == 3 and fused.nc == 16
+    assert fused.issued_rounds() == 3 * 16
+    assert fused.rows_per_round == 64
+    slab = make_ring_schedule(4, 1024, 64, fused=False)
+    assert slab.issued_rounds() == 3
+    assert slab.rows_per_round == 1024
+    # the schedule changes when rows move, never how many
+    assert fused.wire_rows() == slab.wire_rows() == 3 * 1024
+    # the chunk-rotating kernels wait per-chunk semaphores whether the
+    # ticks are interleaved (COUNTER) or drained up front (SIGNAL), so
+    # both charge one tick per (step, chunk) event; the whole-shard
+    # DEFERRED/PIPELINED path waits once per step
+    assert fused.completion_ticks(counter=True) == 3 * 16
+    assert fused.completion_ticks(counter=False) == 3 * 16
+    assert slab.completion_ticks(counter=False) == 3
+    # ring send windows drain at step boundaries: the depth mirror resets
+    # per step instead of carrying across the credit handshake
+    assert max(fused.send_window_depths(4)) == 4
+    assert fused.send_window_depths(4)[16] == 1        # step 1 starts fresh
+    # kv_shuttle's degenerate 2-rank ring: one step, chunk-major
+    shuttle = make_ring_schedule(2, 4096, 64, fused=True)
+    assert shuttle.steps == 1 and shuttle.issued_rounds() == 64
+
+
+def test_per_chunk_overlap_credit_monotone():
+    """The per-chunk rotation credit (cost_model.per_tile_exposed_s): the
+    exposed tail shrinks monotonically as the chunk count grows — finer
+    chunks leave less of each rotation step on the critical path."""
+    wire = 2 * 96 * 1024 * 64 * 2
+    exposed = [per_tile_exposed_s(wire, V5E.ici_link_bw, t)
+               for t in (1, 4, 16, 64)]
+    assert all(a > b for a, b in zip(exposed, exposed[1:]))
+    # and the workload model consumes it: finer kv_chunk -> smaller
+    # exposed tail but more TILE_SYNC ticks, so the knob has a real
+    # optimum, not a monotone best
+    w = ring()
+    coarse = w.analytic_cost(FLUX.with_tunable("kv_chunk", 256), HW)
+    fine = w.analytic_cost(FLUX.with_tunable("kv_chunk", 16), HW)
+    assert coarse != fine
+    # the recycle stall shrinks with a deeper window (shared helper)
+    assert window_stall_factor(4) < window_stall_factor(1)
+
+
+def test_flux_ring_beats_pipelined_deferred_and_host():
+    """At the paper deployment shape (wire-bound ring) the chunk-rotating
+    FLUX point beats the lazy-fence pipelined point, the DEFERRED kernel,
+    and the host baseline; a deeper send window shrinks the per-chunk
+    recycle stall."""
+    w = ring()
+    host = w.analytic_cost(HOST, HW)
+    pipe = w.analytic_cost(PIPELINED, HW)
+    deferred = w.analytic_cost(DEFERRED_KERNEL, HW)
+    flux = w.analytic_cost(FLUX, HW)
+    assert flux < pipe < host
+    assert flux < deferred < host
+    deeper = dataclasses.replace(FLUX, contexts=2)
+    assert w.analytic_cost(deeper, HW) < flux
+
+
+def test_flux_shuttle_beats_chained_and_host():
+    """kv_transfer: the per-tile fused K/V chain (FLUX) beats the chained
+    point, which beats the bundled host transfer; the `chained` tunable
+    flips the non-fused kernel back to the sequential shape."""
+    w = kvt()
+    host = w.analytic_cost(HOST, HW)
+    chained = w.analytic_cost(
+        Directive("PALLAS_RDMA", "SIGNAL", "STREAM_SPLIT"), HW)
+    flux = w.analytic_cost(FLUX, HW)
+    assert flux < chained < host
+    unchained = w.analytic_cost(
+        Directive("PALLAS_RDMA", "SIGNAL",
+                  "STREAM_SPLIT").with_tunable("chained", 0), HW)
+    assert unchained > chained
+    deeper = dataclasses.replace(FLUX, contexts=2)
+    assert w.analytic_cost(deeper, HW) < flux
+
+
+def test_build_and_cost_share_knob_mapping():
+    """kernel_knobs (the Workload protocol's search contract) is the single
+    directive->knob mapping: BARRIER forces the whole-shard drain even
+    under TILE_FUSED, COUNTER marks per-chunk ticks, ACQREL orders the
+    non-fused fence eagerly, and the `chained` tunable overrides the
+    placement-derived chain."""
+    w = ring()
+    k = w.kernel_knobs(FLUX)
+    assert k["fused"] and k["counter"] and k["kv_chunk"] == 64
+    barrier = dataclasses.replace(FLUX, completion="BARRIER")
+    assert not w.kernel_knobs(barrier)["fused"]
+    # BARRIER's global-rendezvous semantics force the serialized drain
+    # even under a pipelined placement (eager fence, no overlap credit)
+    assert w.kernel_knobs(
+        dataclasses.replace(PIPELINED, completion="BARRIER"))["eager"]
+    assert w.kernel_knobs(PIPELINED)["pipelined"]
+    assert not w.kernel_knobs(PIPELINED)["eager"]
+    eager = dataclasses.replace(PIPELINED, ordering="ACQREL")
+    assert w.kernel_knobs(eager)["eager"]
+
+    wk = kvt()
+    assert wk.kernel_knobs(FLUX)["fused"]
+    chained = Directive("PALLAS_RDMA", "SIGNAL", "STREAM_SPLIT")
+    assert wk.kernel_knobs(chained)["chained"]
+    assert not wk.kernel_knobs(chained.with_tunable("chained", 0))["chained"]
+    assert not wk.kernel_knobs(
+        dataclasses.replace(chained, ordering="ACQREL"))["chained"]
+    assert not wk.kernel_knobs(
+        dataclasses.replace(chained, completion="BARRIER"))["chained"]
+    # fast_path seeds directives with default_tunables: the stored
+    # ("chained", None) placeholder means "unset" and must not shadow the
+    # placement-derived default
+    seeded = dataclasses.replace(
+        chained, tunables=tuple(sorted(wk.default_tunables().items())))
+    assert seeded.tunable("chained", True) is None     # the trap itself
+    assert wk.kernel_knobs(seeded)["chained"]
+
+
+# ----------------------------------------------------- kv_chunk sanitization
+
+def test_kv_chunk_sanitized_to_divisor():
+    """A slow-path diff patch may propose any TUNABLES grid value (and
+    worse); every request must map to a divisor of the KV shard so the
+    kernel contract's ``rows % kv_chunk == 0`` can never crash the
+    evaluator."""
+    from repro.core.schedule import sanitize_kv_chunk
+
+    for rows in (64, 96, 128, 192, 1024):
+        for req in list(TUNABLES["kv_chunk"]) + [1, 7, 48, 100, 10_000]:
+            kc = sanitize_kv_chunk(req, rows)
+            assert rows % kc == 0, (req, rows, kc)
+            assert 1 <= kc <= rows
+    # exact divisors pass through untouched
+    assert sanitize_kv_chunk(64, 1024) == 64
+    assert sanitize_kv_chunk(None, 512) == 512
+
+
+def test_non_divisor_kv_chunk_does_not_crash_evaluator():
+    """The cascade survives (and scores) a FLUX-ring directive whose
+    kv_chunk does not divide the example-input shard."""
+    from repro.core.cascade import Candidate, CascadeEvaluator
+    from repro.core.hardware import extract_hardware_context
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    w = ring(n_dev=1, BH=2, seq=128)
+    ev = CascadeEvaluator(w, mesh, extract_hardware_context(mesh))
+    for bad in (48, 100, 7):
+        res = ev.evaluate(Candidate(directive=FLUX.with_tunable("kv_chunk",
+                                                                bad)))
+        assert res.level == 3, (bad, res.diagnostic)
+
+
+# ------------------------------------------------ slow-path tunable space
+
+def test_ring_knobs_in_slow_path_search_space():
+    """kv_chunk / contexts (ring_attention) and chained / kv_chunk
+    (kv_transfer) are refinable diff-patch dimensions drawn from the
+    central TUNABLES registry."""
+    import random
+
+    from repro.core.cascade import Candidate, EvalResult
+    from repro.core.mutation import HeuristicMutator, MutationContext
+    from repro.core.slow_path import _tunable_space
+
+    space = _tunable_space(ring())
+    assert space["kv_chunk"] == TUNABLES["kv_chunk"]
+    assert "contexts" in space
+    kspace = _tunable_space(kvt())
+    assert kspace["chained"] == TUNABLES["chained"]
+    assert kspace["kv_chunk"] == TUNABLES["kv_chunk"]
+
+    traits = ring().traits(HW)
+    parent = Candidate(directive=FLUX)
+    parent.result = EvalResult(3, 100.0, 1.0, diagnostic="ok: modeled")
+    ctx = MutationContext(parent=parent, phase="exploit", traits=traits,
+                          tunable_space=space)
+    mut = HeuristicMutator()
+    moved = set()
+    for seed in range(400):
+        rng = random.Random(seed)
+        child, _ = mut.propose(ctx, rng)
+        if child.contexts != parent.directive.contexts:
+            moved.add("contexts")
+        if child.tunable("kv_chunk") != parent.directive.tunable("kv_chunk"):
+            moved.add("kv_chunk")
+    assert {"kv_chunk", "contexts"} <= moved, moved
+
+
+# --------------------------------------------------------- l3 cascade smoke
+
+def test_flux_ring_cascade_reaches_l3():
+    """The FLUX directive builds, verifies under interpret mode, and
+    scores at l3 through the full cascade for the ring workload (1-rank
+    mesh; the 4-rank version runs in tests/scripts/ring_kernel_suite.py)."""
+    from repro.core.cascade import Candidate, CascadeEvaluator
+    from repro.core.hardware import extract_hardware_context
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    w = ring(n_dev=1, BH=2, seq=128)
+    ev = CascadeEvaluator(w, mesh, extract_hardware_context(mesh))
+    for d in (FLUX, DEFERRED_KERNEL):
+        res = ev.evaluate(Candidate(directive=d))
+        assert res.level == 3, res.diagnostic
+        assert res.score > 0
+
+
+def test_fig3_reports_kernelized_rows():
+    from benchmarks import fig3_flash_attention
+
+    rows = fig3_flash_attention.run()
+    names = [r[0] for r in rows]
+    for seq in (4096, 8192):
+        for hd in (32, 64):
+            for point in ("host", "cuco", "deferred", "flux"):
+                assert f"fig3/ring_attn_seq{seq}_hd{hd}_{point}" in names
+    host = next(r for r in rows if r[0] == "fig3/ring_attn_seq4096_hd64_host")
+    flux = next(r for r in rows if r[0] == "fig3/ring_attn_seq4096_hd64_flux")
+    deferred = next(r for r in rows
+                    if r[0] == "fig3/ring_attn_seq4096_hd64_deferred")
+    assert flux[1] < deferred[1] < host[1]

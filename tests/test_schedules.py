@@ -1,13 +1,16 @@
 """Property tests for the trace-time round schedules of the device-initiated
-kernels: the moe_dispatch permutation-round schedule (``DispatchSchedule``)
-and the gemm_allgather broadcast-round schedule (``BroadcastSchedule``).
+kernels — the three concrete builders of the ``CollectiveSchedule`` contract
+in ``src/repro/core/schedule.py``: the moe_dispatch permutation-round
+schedule (``DispatchSchedule``), the gemm_allgather broadcast-round schedule
+(``BroadcastSchedule``), and the ring-rotation schedule (``RingSchedule``).
 
 Invariants (docs/kernels.md — the lockstep contract the legacy 0.4.x pallas
 interpreter enforces at runtime):
-  * every (peer-offset, tile/microblock) edge appears exactly once;
+  * every (edge, tile/microblock/chunk) event appears exactly once;
   * the round order is total, deterministic, and rank-independent (lockstep:
     every rank issues the same DMA sequence);
-  * the ``contexts``-deep send window never exceeds its cap and drains.
+  * the ``contexts``-deep send window never exceeds its cap and drains;
+  * the sanitizers map any knob value to an exact divisor of the shape.
 """
 import pytest
 
@@ -15,11 +18,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.gemm_allgather import (BroadcastSchedule,
-                                          make_broadcast_schedule,
-                                          sanitize_tile_m)
-from repro.kernels.moe_dispatch import (make_schedule,
-                                        sanitize_combine_tile)
+from repro.core.schedule import (make_broadcast_schedule, make_ring_schedule,
+                                 make_schedule, sanitize_combine_tile,
+                                 sanitize_kv_chunk, sanitize_tile_m)
 
 # ----------------------------------------------------- strategy definitions
 
@@ -33,6 +34,12 @@ disp_scheds = st.builds(
     lambda counts, B, tight: make_schedule(counts, B, tight),
     counts=st.lists(st.integers(0, 300), min_size=1, max_size=8),
     B=st.sampled_from((16, 64)), tight=st.booleans())
+
+ring_scheds = st.builds(
+    lambda n, nc, kv_chunk, fused: make_ring_schedule(
+        n, nc * kv_chunk, kv_chunk, fused),
+    n=st.integers(1, 8), nc=st.integers(1, 16),
+    kv_chunk=st.sampled_from((8, 32, 128)), fused=st.booleans())
 
 contexts = st.sampled_from((1, 2, 4))
 
@@ -76,14 +83,23 @@ def test_broadcast_ticks_cover_wire(s):
     assert s.completion_ticks(counter=False) == s.n - 1
 
 
-@given(st.one_of(bcast_scheds, disp_scheds), contexts)
+@given(st.one_of(bcast_scheds, disp_scheds, ring_scheds), contexts)
 @settings(max_examples=200, deadline=None)
 def test_send_window_never_exceeds_contexts(s, ctx):
+    from repro.core.schedule import RingSchedule
+
     depths = s.send_window_depths(ctx)
     assert len(depths) == len(s.rounds)
     assert all(1 <= d <= max(1, ctx) for d in depths)
-    # the window saturates once enough rounds exist (no artificial stall)
-    if len(depths) >= ctx:
+    # the window saturates once enough rounds exist (no artificial stall).
+    # Ring kernels drain at every step boundary (the slot-credit
+    # handshake), so their depth resets per step and saturates within one
+    # step's rounds rather than across the whole list.
+    if isinstance(s, RingSchedule):
+        per_step = s.nc if s.fused else 1
+        if s.steps:
+            assert max(depths) == min(max(1, ctx), per_step)
+    elif len(depths) >= ctx:
         assert max(depths, default=0) == min(ctx, len(depths))
 
 
@@ -111,6 +127,58 @@ def test_dispatch_wire_accounting_consistent(s):
     assert s.issued_rounds(elide_dummy=True) <= s.issued_rounds()
 
 
+# ------------------------------------------------------ ring rotation rounds
+
+@given(ring_scheds)
+@settings(max_examples=200, deadline=None)
+def test_ring_every_step_chunk_exactly_once(s):
+    """Every (step, chunk) rotation event appears exactly once: n-1 shift
+    steps, each split into nc chunks (fused) or one whole-shard round."""
+    rounds = s.rounds
+    assert len(rounds) == len(set(rounds)) == s.issued_rounds()
+    if s.fused:
+        assert set(rounds) == {(step, c) for step in range(s.steps)
+                               for c in range(s.nc)}
+    else:
+        assert set(rounds) == {(step, 0) for step in range(s.steps)}
+    # dense ring: every round moves rows_per_round rows of each rotated
+    # tensor, totalling the (n-1)-shard wire
+    assert len(rounds) * s.rows_per_round == s.wire_rows()
+
+
+@given(ring_scheds)
+@settings(max_examples=200, deadline=None)
+def test_ring_order_total_and_step_major(s):
+    """Lockstep order: rank-independent by construction and strictly
+    step-major, chunk-ordered within a step — chunk c's send issues before
+    chunk c+1's compute, and no step s+1 round precedes a step s round
+    (the rotation's data dependence)."""
+    rounds = s.rounds
+    assert rounds == sorted(rounds)
+    assert rounds == s.rounds            # deterministic (a pure property)
+
+
+@given(ring_scheds)
+@settings(max_examples=200, deadline=None)
+def test_ring_ticks_cover_rotation(s):
+    """The chunk-rotating kernels wait per-chunk semaphores whether ticks
+    are interleaved (COUNTER) or drained up front (SIGNAL) — identical
+    executed wait counts, so the model charges both the same; the tick
+    count times the chunk rows covers exactly the rotated rows."""
+    ticks = s.completion_ticks(counter=True)
+    assert ticks == s.completion_ticks(counter=False)
+    if s.fused:
+        assert ticks * s.kv_chunk == s.steps * s.rows
+    else:
+        assert ticks == s.steps
+    # a step has exactly nc chunk rounds (the drain boundary of the window)
+    if s.fused and s.steps:
+        step_rounds = [r for r in s.rounds if r[0] == 0]
+        assert len(step_rounds) == s.nc
+
+
+# --------------------------------------------------------------- sanitizers
+
 @given(st.integers(1, 256), st.integers(0, 512))
 @settings(max_examples=200, deadline=None)
 def test_sanitizers_return_divisors(B, req):
@@ -118,3 +186,7 @@ def test_sanitizers_return_divisors(B, req):
     assert B % ct == 0 and 1 <= ct <= B
     tm = sanitize_tile_m(req, B)
     assert B % tm == 0 and 1 <= tm <= B
+    kc = sanitize_kv_chunk(req, B)
+    assert B % kc == 0 and 1 <= kc <= B
+    # one algorithm for the whole package (core/schedule.py::sanitize_tile)
+    assert ct == tm == kc
