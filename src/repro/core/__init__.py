@@ -17,9 +17,12 @@ from repro.core.cost_model import (RooflineReport, parse_collectives,
                                    window_stall_factor)
 from repro.core.schedule import (CollectiveSchedule, BroadcastSchedule,
                                  DispatchSchedule, RingSchedule, SendWindow,
-                                 make_broadcast_schedule, make_ring_schedule,
-                                 make_schedule, sanitize_tile,
+                                 check_live, make_broadcast_schedule,
+                                 make_ring_schedule, make_schedule,
+                                 respill_counts, sanitize_tile,
                                  send_window_depths)
+from repro.core.faults import (FaultPlan, FaultSpec, fault_cost,
+                               inject_wire_fault, survival_report)
 from repro.core.comm_graph import analyze as analyze_comm_graph
 from repro.core.cascade import Candidate, CascadeEvaluator, EvalResult
 from repro.core.database import CandidateDB, embed_code
@@ -37,9 +40,11 @@ __all__ = [
     "RooflineReport", "parse_collectives", "per_tile_exposed_s",
     "roofline_from_compiled", "window_stall_factor",
     "CollectiveSchedule", "BroadcastSchedule", "DispatchSchedule",
-    "RingSchedule", "SendWindow", "make_broadcast_schedule",
-    "make_ring_schedule", "make_schedule", "sanitize_tile",
+    "RingSchedule", "SendWindow", "check_live", "make_broadcast_schedule",
+    "make_ring_schedule", "make_schedule", "respill_counts", "sanitize_tile",
     "send_window_depths",
+    "FaultPlan", "FaultSpec", "fault_cost", "inject_wire_fault",
+    "survival_report",
     "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",
     "CandidateDB", "embed_code", "MapElitesArchive", "HeuristicMutator",
     "LLMMutator", "MutationContext", "parse_directive", "MetaSummarizer",

@@ -6,9 +6,25 @@ l1/l2 score 0 and carry a diagnostic for the feedback loop.
 l3 on this CPU-only container is the analytic v5e roofline composition of the
 workload at its full deployment shape (DESIGN.md §2); ``wallclock=True``
 additionally times the small-shape execution (used by ablation benchmarks).
+
+Hardened for unattended search (the slow path runs thousands of candidates
+with nobody watching):
+
+* ``timeout_s`` — a per-candidate wall-clock budget. Evaluation runs on a
+  daemon worker thread; a candidate that wedges (infinite trace, hung
+  interpret) is abandoned at the deadline, recorded in ``quarantine``, and
+  scored 0 with ``quarantined=True`` — it can never stall ``slow_path.py``.
+* one retry with backoff for flaky l2 *executions* (``l2_retries``): a
+  transient runtime error re-runs after ``backoff_s``; a deterministic
+  verify mismatch never retries. ``EvalResult.retries`` records the count.
+* ``fault_plans`` — fault scenarios (``core/faults.py``) priced at l3 into
+  ``EvalResult.fault_report``; ``fault_weight`` folds the mean degraded-ms
+  penalty into the score so the search optimizes a (throughput,
+  fault-survival) trade-off.
 """
 from __future__ import annotations
 
+import threading
 import time
 import traceback
 from dataclasses import dataclass, field
@@ -28,6 +44,9 @@ class EvalResult:
     t_wall_ms: float = float("inf")
     diagnostic: str = ""
     hlo_ops: dict = field(default_factory=dict)
+    fault_report: dict = field(default_factory=dict)  # plan -> healthy/degraded ms
+    quarantined: bool = False     # abandoned at the wall-clock deadline
+    retries: int = 0              # flaky-l2 re-executions that were needed
 
     @property
     def ok(self):
@@ -52,17 +71,66 @@ class Candidate:
 
 class CascadeEvaluator:
     def __init__(self, workload, mesh, hw, *, rtol=2e-3, wallclock=False,
-                 verify_inputs=None):
+                 verify_inputs=None, timeout_s=None, l2_retries=1,
+                 backoff_s=0.05, fault_plans=(), fault_weight=0.0):
         self.workload = workload
         self.mesh = mesh
         self.hw = hw
         self.rtol = rtol
         self.wallclock = wallclock
+        self.timeout_s = timeout_s
+        self.l2_retries = max(0, int(l2_retries))
+        self.backoff_s = backoff_s
+        self.fault_plans = tuple(fault_plans)
+        self.fault_weight = fault_weight
+        self.quarantine = []          # wedged-candidate diagnostics
         key = jax.random.PRNGKey(1234)
         self.inputs = verify_inputs or workload.example_inputs(key, mesh)
         self.expected = workload.reference(*self.inputs)
 
     def evaluate(self, cand: Candidate) -> EvalResult:
+        """Evaluate under the wall-clock budget: the cascade body runs on
+        a daemon thread; past ``timeout_s`` the candidate is quarantined
+        (the wedged thread is abandoned — it holds no locks the search
+        needs) and the slow path moves on."""
+        if not self.timeout_s:
+            return self._evaluate(cand)
+        box = {}
+
+        def run():
+            try:
+                box["res"] = self._evaluate(cand)
+            except BaseException as e:        # surfaced below, never lost
+                box["err"] = e
+
+        th = threading.Thread(target=run, daemon=True,
+                              name=f"cascade-eval-{cand.cid}")
+        t0 = time.perf_counter()
+        th.start()
+        th.join(self.timeout_s)
+        if th.is_alive():
+            diag = (f"quarantined: evaluation exceeded {self.timeout_s:.2f}s "
+                    "wall-clock (wedged build/execute abandoned)")
+            self.quarantine.append({
+                "cid": cand.cid, "directive": repr(cand.directive),
+                "elapsed_s": time.perf_counter() - t0, "diagnostic": diag})
+            return EvalResult(0, 0.0, diagnostic=diag, quarantined=True)
+        if "err" in box:
+            e = box["err"]
+            return EvalResult(0, 0.0, diagnostic="evaluator error:\n" + "".join(
+                traceback.format_exception(type(e), e, e.__traceback__))[-1500:])
+        return box["res"]
+
+    def quarantine_report(self):
+        """Diagnostics of every candidate abandoned at the deadline."""
+        return list(self.quarantine)
+
+    def _run_l2(self, jfn):
+        """The l2 execution boundary — a deliberate seam: tests and fault
+        suites wrap it to inject flaky executions or wire faults."""
+        return jfn(*self.inputs)
+
+    def _evaluate(self, cand: Candidate) -> EvalResult:
         d = cand.directive
         # ---- l1: directive validity + build + trace/compile -------------
         viol = self.workload.check(d, self.hw)
@@ -78,30 +146,53 @@ class CascadeEvaluator:
             return EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
                               + traceback.format_exc()[-1500:])
         # ---- l2: numerical verification ---------------------------------
-        try:
-            out = jfn(*self.inputs)
-            tol = self.rtol
-            if d.tunable("wire_i8", 0):
-                tol = max(tol, 8e-2)          # quantized wire is lossy by design
-            for got, exp in zip(jax.tree.leaves(out),
-                                jax.tree.leaves(self.expected)):
-                got = np.asarray(got, np.float32)
-                exp = np.asarray(exp, np.float32)
-                if not np.all(np.isfinite(got)):
-                    return EvalResult(1, 0.0, diagnostic=(
-                        "l2 verify failed: non-finite values (deadlock-free "
-                        "but corrupt transfer — check completion/ordering)"))
-                err = np.max(np.abs(got - exp)) / (np.max(np.abs(exp)) + 1e-9)
-                if err > tol:
-                    return EvalResult(1, 0.0, diagnostic=(
-                        f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
-                        f"(placement={d.placement}, completion={d.completion})"))
-        except Exception:
-            return EvalResult(1, 0.0, diagnostic="l2 execution failed:\n"
-                              + traceback.format_exc()[-1500:])
+        # transient execution errors retry with backoff; a deterministic
+        # verify mismatch below never does
+        retries = 0
+        while True:
+            try:
+                out = self._run_l2(jfn)
+                break
+            except Exception:
+                if retries >= self.l2_retries:
+                    return EvalResult(1, 0.0, retries=retries,
+                                      diagnostic="l2 execution failed:\n"
+                                      + traceback.format_exc()[-1500:])
+                retries += 1
+                time.sleep(self.backoff_s * retries)
+        tol = self.rtol
+        if d.tunable("wire_i8", 0):
+            tol = max(tol, 8e-2)          # quantized wire is lossy by design
+        for got, exp in zip(jax.tree.leaves(out),
+                            jax.tree.leaves(self.expected)):
+            got = np.asarray(got, np.float32)
+            exp = np.asarray(exp, np.float32)
+            if not np.all(np.isfinite(got)):
+                return EvalResult(1, 0.0, retries=retries, diagnostic=(
+                    "l2 verify failed: non-finite values (deadlock-free "
+                    "but corrupt transfer — check completion/ordering)"))
+            err = np.max(np.abs(got - exp)) / (np.max(np.abs(exp)) + 1e-9)
+            if err > tol:
+                return EvalResult(1, 0.0, retries=retries, diagnostic=(
+                    f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
+                    f"(placement={d.placement}, completion={d.completion})"))
         # ---- l3: benchmark ----------------------------------------------
         t_model = self.workload.analytic_cost(d, self.hw)
         t_ms = t_model * 1e3
+        fault_report = {}
+        if self.fault_plans:
+            from repro.core.faults import survival_report
+            fault_report = survival_report(self.workload, d, self.hw,
+                                           self.fault_plans)
+        # fault-survival trade-off: the score price of a plan is its mean
+        # degraded-over-healthy penalty; a plan the candidate cannot
+        # survive prices as +inf and zeroes the score (level stays 3 — the
+        # candidate is correct, just fragile)
+        t_eff = t_ms
+        if fault_report and self.fault_weight:
+            pens = [max(0.0, e["degraded_ms"] - e["healthy_ms"])
+                    for e in fault_report.values()]
+            t_eff = t_ms + self.fault_weight * sum(pens) / len(pens)
         t_wall = float("inf")
         if self.wallclock:
             jfn(*self.inputs)
@@ -109,6 +200,7 @@ class CascadeEvaluator:
             for _ in range(3):
                 jax.block_until_ready(jfn(*self.inputs))
             t_wall = (time.perf_counter() - t0) / 3 * 1e3
-        return EvalResult(3, 10000.0 / (1.0 + t_ms), t_model_ms=t_ms,
-                          t_wall_ms=t_wall,
+        return EvalResult(3, 10000.0 / (1.0 + t_eff), t_model_ms=t_ms,
+                          t_wall_ms=t_wall, fault_report=fault_report,
+                          retries=retries,
                           diagnostic=f"ok: modeled {t_ms:.3f} ms")

@@ -50,7 +50,8 @@ __all__ = [
     "RingSchedule", "SendWindow", "make_schedule",
     "make_broadcast_schedule", "make_ring_schedule", "block_counts",
     "send_window_depths", "sanitize_tile", "sanitize_combine_tile",
-    "sanitize_tile_m", "sanitize_kv_chunk", "sem_slot",
+    "sanitize_tile_m", "sanitize_kv_chunk", "sem_slot", "check_live",
+    "respill_counts",
 ]
 
 
@@ -115,6 +116,52 @@ class SendWindow:
         """Retire every in-flight round (step/kernel boundary)."""
         while self._rounds:
             self._wait(self._rounds.pop(0))
+
+
+def check_live(live_ranks, n):
+    """Validate a degraded-membership set against an ``n``-rank schedule.
+
+    Returns the canonical live tuple (sorted, deduplicated). Raises
+    ``ValueError`` on an empty set or an out-of-range rank — the one
+    contract every ``degrade(live_ranks)`` implementation shares, so a
+    malformed membership update fails loudly at trace time instead of
+    wedging a kernel at run time."""
+    live = tuple(sorted({int(r) for r in live_ranks}))
+    if not live:
+        raise ValueError("degrade: live_ranks must be non-empty "
+                         "(a collective needs at least one survivor)")
+    if live[0] < 0 or live[-1] >= n:
+        raise ValueError(
+            f"degrade: live_ranks {live} out of range for n={n}")
+    return live
+
+
+def respill_counts(counts, live_ranks, capacity_factor=1.25):
+    """Capacity-factor re-spill: re-route the tokens of dead experts onto
+    the survivors. Token-conserving (``sum`` is preserved) and
+    deterministic: spilled tokens fill the survivor with the most headroom
+    below ``capacity_factor * total / len(live)`` first (ties break toward
+    the lower live index); once every survivor is at capacity the overflow
+    spreads uniformly. The result is the ``counts`` of the degraded
+    :class:`DispatchSchedule` — a smaller instance of the same class."""
+    counts = tuple(int(c) for c in counts)
+    live = check_live(live_ranks, len(counts))
+    total = int(sum(counts))
+    new = [counts[e] for e in live]
+    spilled = total - sum(new)
+    if spilled > 0:
+        cap = max(1, int(math.ceil(capacity_factor * total / len(live))))
+        while spilled:
+            i = max(range(len(new)), key=lambda j: (cap - new[j], -j))
+            if cap - new[i] <= 0:
+                break                    # every survivor at capacity
+            give = min(spilled, cap - new[i])
+            new[i] += give
+            spilled -= give
+        if spilled:                      # overflow beyond the factor
+            q, r = divmod(spilled, len(new))
+            new = [c + q + (1 if i < r else 0) for i, c in enumerate(new)]
+    return tuple(new)
 
 
 def sanitize_tile(tile, total):
@@ -184,6 +231,20 @@ class CollectiveSchedule:
     def send_window_depths(self, contexts):
         """See module-level :func:`send_window_depths`."""
         return send_window_depths(self.rounds, contexts)
+
+    def degrade(self, live_ranks):
+        """Membership-aware degraded-mode schedule over ``live_ranks``.
+
+        Returns a **smaller instance of the same class** under compaction
+        renumbering (live rank ``r`` becomes its index in the sorted live
+        tuple): rounds name shift *offsets*, never absolute ranks, so the
+        compacted schedule trivially re-satisfies the whole contract —
+        lockstep total order, edges-exactly-once-among-live-ranks, the
+        ``contexts`` window cap — and the kernels run it unmodified on the
+        surviving mesh. No round ever names a dead rank, so no DMA is
+        issued to (and no semaphore wait taken on) one: bounded-wait by
+        construction. ``degrade`` with every rank live returns ``self``."""
+        raise NotImplementedError
 
 
 # ------------------------------------------------- moe_dispatch (the flagship)
@@ -269,6 +330,18 @@ class DispatchSchedule(CollectiveSchedule):
         return self.combine_issued_rounds(rank, elide_dummy) \
             * (self.block_tokens // ct)
 
+    def degrade(self, live_ranks, capacity_factor=1.25):
+        """Respill the dead experts' tokens across the survivors
+        (:func:`respill_counts`) and rebuild the permutation schedule at
+        ``n = len(live)`` — token-conserving, same ``block_tokens``/
+        ``tight`` realization."""
+        live = check_live(live_ranks, self.n)
+        if len(live) == self.n:
+            return self
+        return make_schedule(
+            respill_counts(self.counts, live, capacity_factor),
+            self.block_tokens, self.tight)
+
 
 def make_schedule(counts, block_tokens=64, tight=True):
     counts = tuple(int(c) for c in counts)
@@ -327,6 +400,16 @@ class BroadcastSchedule(CollectiveSchedule):
         if self.fused and counter:
             return (self.n - 1) * self.nt
         return self.n - 1
+
+    def degrade(self, live_ranks):
+        """Splice the dead ranks out of the shift permutation: offsets run
+        ``1..len(live)-1`` over the compacted rank space — same slab, same
+        tile realization, fewer broadcast targets."""
+        live = check_live(live_ranks, self.n)
+        if len(live) == self.n:
+            return self
+        return make_broadcast_schedule(len(live), self.M_l, self.tile_m,
+                                       self.fused)
 
 
 def make_broadcast_schedule(n_dev, M_l, tile_m=128, fused=True):
@@ -410,6 +493,16 @@ class RingSchedule(CollectiveSchedule):
         per_step = send_window_depths(range(self.nc if self.fused else 1),
                                       contexts)
         return per_step * self.steps
+
+    def degrade(self, live_ranks):
+        """Splice the dead ranks out of the rotation: the ring closes over
+        the compacted live order (``len(live) - 1`` shift steps) — same
+        shard rows, same chunking, fewer rotation hops."""
+        live = check_live(live_ranks, self.n)
+        if len(live) == self.n:
+            return self
+        return make_ring_schedule(len(live), self.rows, self.kv_chunk,
+                                  self.fused)
 
 
 def make_ring_schedule(n_dev, rows, kv_chunk=None, fused=True):

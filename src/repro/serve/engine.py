@@ -5,9 +5,21 @@ workload at system level): ``prefill_remote`` runs prefill as if on a prefill
 tier and ships the cache to the decode tier — on real hardware via the
 device-initiated kv_shuttle kernel; the engine-level handoff here is the
 cache pytree handover, with the kernel exercised by the workload benchmarks.
+
+Sampling draws from ONE stateful key stream: the engine seeds
+``PRNGKey(seed)`` once and splits a fresh subkey per sample, threaded
+through prefill/generate/decode_from_handoff — two temperature>0 batches
+never sample with the identical key (the old per-call ``PRNGKey(seed)``
+re-creation did exactly that), while re-constructing the engine with the
+same seed reproduces the stream exactly.
+
+An optional :class:`repro.train.fault_tolerance.StragglerWatchdog` receives
+per-decode-step wall times — the serving side of the elastic fault loop
+(``should_replace`` -> drop the rank, degrade the schedules, keep serving).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import jax
@@ -29,11 +41,14 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg, params, serve_cfg: ServeConfig, rules=None):
+    def __init__(self, cfg, params, serve_cfg: ServeConfig, rules=None,
+                 watchdog=None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
         self.rules = rules
+        self.watchdog = watchdog          # optional StragglerWatchdog
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._prefill = jax.jit(
             lambda p, b: prefill_step(p, b, cfg, rules,
                                       seq_len=serve_cfg.max_seq,
@@ -42,29 +57,38 @@ class Engine:
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, rules,
                                              opts=serve_cfg.opts))
 
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0:
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits[:, -1] / self.scfg.temperature).astype(jnp.int32)
 
+    def _decode_one(self, cache, tok, pos):
+        t0 = time.perf_counter()
+        logits, cache = self._decode(self.params, cache, tok[:, None],
+                                     jnp.int32(pos))
+        tok = self._sample(logits, self._next_key())
+        if self.watchdog is not None:
+            jax.block_until_ready(tok)
+            self.watchdog.record(time.perf_counter() - t0)
+        return tok, cache
+
     def prefill(self, batch):
         """batch: {"tokens": (B, S0), ...} -> (first_token, cache, pos)."""
         logits, cache = self._prefill(self.params, batch)
-        key = jax.random.PRNGKey(self.scfg.seed)
-        tok = self._sample(logits, key)
+        tok = self._sample(logits, self._next_key())
         return tok, cache, batch["tokens"].shape[1]
 
     def generate(self, batch, max_new_tokens):
         """Batched greedy/sampled generation. Returns (B, new) tokens."""
         tok, cache, pos = self.prefill(batch)
         out = [tok]
-        key = jax.random.PRNGKey(self.scfg.seed)
         for i in range(max_new_tokens - 1):
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         jnp.int32(pos + i))
-            tok = self._sample(logits, sub)
+            tok, cache = self._decode_one(cache, tok, pos + i)
             out.append(tok)
         return jnp.stack(out, axis=1)
 
@@ -81,11 +105,7 @@ class Engine:
         cache = handoff["cache"]
         pos = handoff["pos"]
         out = [tok]
-        key = jax.random.PRNGKey(self.scfg.seed + 1)
         for i in range(max_new_tokens - 1):
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         jnp.int32(pos + i))
-            tok = self._sample(logits, sub)
+            tok, cache = self._decode_one(cache, tok, pos + i)
             out.append(tok)
         return jnp.stack(out, axis=1)

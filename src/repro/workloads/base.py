@@ -86,6 +86,24 @@ class Workload:
     def default_tunables(self):
         return {}
 
+    # --- the fault contract (core/faults.py, docs/kernels.md) ---
+    def degrade(self, live_ranks):
+        """Membership-aware reshape onto the surviving ranks: a **smaller
+        workload of the same class** whose schedules, builders and l3
+        model all run at ``n = len(live_ranks)`` (compaction renumbering,
+        mirroring ``CollectiveSchedule.degrade``). ``fault_cost`` prices a
+        dropped-peer plan through this; the fault suite runs the degraded
+        build through the full cascade on the surviving mesh."""
+        raise NotImplementedError(
+            f"{self.name} has no degraded-mode reshape")
+
+    def state_bytes_per_rank(self) -> int:
+        """Resident bytes one rank holds at the deployment shape — the
+        recovery term of ``fault_cost``: a dead rank's state must
+        re-materialize over ICI before the degraded step can run, which
+        keeps a smaller mesh from ever modeling *cheaper* than health."""
+        raise NotImplementedError
+
     # --- the search contract (docs/kernels.md) ---
     def kernel_knobs(self, d: Directive) -> dict:
         """Directive → kernel-knob mapping, shared by ``build()`` and

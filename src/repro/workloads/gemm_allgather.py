@@ -63,6 +63,26 @@ class GemmAllGather(Workload):
         from repro.kernels.ref import gemm_allgather_ref
         return gemm_allgather_ref(a, b)
 
+    # ------------------------------------------- fault contract (core/faults)
+    def degrade(self, live_ranks):
+        """The global GEMM redistributes over the survivors: the local slab
+        grows to ``ceil(M / n')`` rows (M rounds up to the new rank count —
+        the broadcast schedule requires equal slabs)."""
+        from repro.core.schedule import check_live
+        live = check_live(live_ranks, self.n_dev)
+        if len(live) == self.n_dev:
+            return self
+        n = len(live)
+        M_l = -(-self.M // n)
+        return type(self)(n_dev=n, M=M_l * n, K=self.K, N=self.N,
+                          axis=self.axis)
+
+    def state_bytes_per_rank(self):
+        # resident A slab + result slab (f32); B is replicated — survivors
+        # already hold it, so a dead rank's copy needs no recovery wire
+        M_l = self.M // self.n_dev
+        return 4 * M_l * (self.K + self.N)
+
     # ------------------------------------------------------------- builders
     def host_baseline(self, mesh):
         axis = self.axis

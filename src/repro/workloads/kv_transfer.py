@@ -43,8 +43,12 @@ class KVTransfer(Workload):
     ring_topology = False
     kernelizable = True
 
-    def __init__(self, T=4096, d=4096, dk=512, axis="x"):
-        self.n_dev = 2
+    def __init__(self, T=4096, d=4096, dk=512, axis="x", solo=False):
+        # ``solo``: the degraded single-tier fallback — one rank lost, the
+        # survivor runs prefill and decode colocated, so the K/V projections
+        # stay local and the shuttle disappears (degrade, don't hang)
+        self.solo = bool(solo)
+        self.n_dev = 1 if solo else 2
         self.T = T
         self.d = d
         self.dk = dk
@@ -54,7 +58,8 @@ class KVTransfer(Workload):
         T = T or min(self.T, 128)
         ks = jax.random.split(key, 3)
         x_real = jax.random.normal(ks[0], (T, self.d // 8), jnp.float32)
-        x = jnp.stack([x_real, jnp.zeros_like(x_real)])
+        x = x_real[None] if self.solo \
+            else jnp.stack([x_real, jnp.zeros_like(x_real)])
         wk = jax.random.normal(ks[1], (self.d // 8, self.dk // 4), jnp.float32)
         wv = jax.random.normal(ks[2], (self.d // 8, self.dk // 4), jnp.float32)
         return x, wk, wv
@@ -62,11 +67,32 @@ class KVTransfer(Workload):
     def reference(self, x, wk, wv):
         k = x[0] @ wk
         v = x[0] @ wv
+        if self.solo:
+            return k[None], v[None]
         z = jnp.zeros_like(k)
         return jnp.stack([z, k]), jnp.stack([jnp.zeros_like(v), v])
 
+    # ------------------------------------------- fault contract (core/faults)
+    def degrade(self, live_ranks):
+        """Losing either tier collapses the disaggregation: the survivor
+        serves prefill+decode colocated (the ``solo`` fallback — K/V stay
+        local, the shuttle disappears). The recovery term of ``fault_cost``
+        charges re-materializing the dead tier's cache over ICI."""
+        from repro.core.schedule import check_live
+        live = check_live(live_ranks, self.n_dev)
+        if len(live) == self.n_dev:
+            return self
+        return type(self)(T=self.T, d=self.d, dk=self.dk, axis=self.axis,
+                          solo=True)
+
+    def state_bytes_per_rank(self):
+        # prefill activations + the K/V cache of the handoff (f32)
+        return 4 * (self.T * self.d + 2 * self.T * self.dk)
+
     # ------------------------------------------------------------- builders
     def host_baseline(self, mesh):
+        if self.solo:
+            return self._solo_local()
         axis = self.axis
 
         @functools.partial(shard_map, mesh=mesh,
@@ -128,7 +154,16 @@ class KVTransfer(Workload):
             chained=bool(ch))
         return k
 
+    def _solo_local(self):
+        # the single-tier fallback: both projections local, no collective
+        def run(x, wk, wv):
+            return (x[0] @ wk)[None], (x[0] @ wv)[None]
+
+        return run
+
     def build(self, d: Directive, mesh):
+        if self.solo:
+            return self._solo_local()
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 return self._stream_split(mesh)
@@ -152,6 +187,10 @@ class KVTransfer(Workload):
         T, dd, dk = self.T, self.d, self.dk
         t_gemm = 2.0 * T * dd * dk / hw.chip.peak_bf16_flops
         t_send = T * dk * 2 / hw.chip.ici_link_bw
+        if self.solo:
+            # colocated fallback: both GEMMs, no wire (fault_cost adds the
+            # dead tier's cache recovery on top)
+            return 2 * t_gemm + KERNEL_LAUNCH
         sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":

@@ -67,22 +67,50 @@ class MoEDispatch(Workload):
     kernelizable = True           # repro.kernels.moe_dispatch (DeepEP-style)
 
     def __init__(self, n_dev=4, tokens_per_rank=4096, d=512, f=1024,
-                 skew=3.0, axis="x"):
+                 skew=3.0, axis="x", route_weights=None):
         self.n_dev = n_dev
         self.T = tokens_per_rank
         self.d = d
         self.f = f
         self.skew = skew
         self.axis = axis
+        # explicit routing shares override the skew law — the degraded
+        # (post-respill) instances carry their re-routed distribution here
+        self.route_weights = None if route_weights is None \
+            else tuple(float(v) for v in route_weights)
 
     # deterministic skewed routing: expert e's share ~ skew^(-e); identical
     # on every rank; tokens sorted into contiguous per-expert blocks.
     def _counts(self, T):
-        w = np.array([self.skew ** (-e) for e in range(self.n_dev)])
+        if self.route_weights is not None:
+            w = np.array(self.route_weights, dtype=float)
+        else:
+            w = np.array([self.skew ** (-e) for e in range(self.n_dev)])
         w = w / w.sum()
         counts = np.floor(w * T).astype(int)
         counts[0] += T - counts.sum()
         return counts
+
+    # ------------------------------------------- fault contract (core/faults)
+    def degrade(self, live_ranks, capacity_factor=1.25):
+        """Dead experts' tokens respill across the survivors (the
+        ``respill_counts`` capacity-factor rule applied to the deployment
+        routing); the respilled counts become the degraded instance's
+        routing shares so every ``T`` re-derives proportionally."""
+        from repro.core.schedule import check_live, respill_counts
+        live = check_live(live_ranks, self.n_dev)
+        if len(live) == self.n_dev:
+            return self
+        new_counts = respill_counts(self._counts(self.T), live,
+                                    capacity_factor)
+        return type(self)(n_dev=len(live), tokens_per_rank=self.T, d=self.d,
+                          f=self.f, skew=self.skew, axis=self.axis,
+                          route_weights=new_counts)
+
+    def state_bytes_per_rank(self):
+        # resident activations + the rank's expert weights (f32)
+        return 4 * (self.T * self.d
+                    + self.d * 2 * self.f + self.f * self.d)
 
     def _assignment(self, T):
         return jnp.asarray(np.repeat(np.arange(self.n_dev), self._counts(T)),

@@ -67,6 +67,24 @@ class RingAttention(Workload):
     def reference(self, q, k, v):
         return ring_attention_ref(q, k, v, causal=True)
 
+    # ------------------------------------------- fault contract (core/faults)
+    def degrade(self, live_ranks):
+        """The global sequence re-shards over the survivors: the local KV
+        shard grows to ``ceil(seq / n')`` rows (seq rounds up to the new
+        rank count — the rotation requires equal shards)."""
+        from repro.core.schedule import check_live
+        live = check_live(live_ranks, self.n_dev)
+        if len(live) == self.n_dev:
+            return self
+        n = len(live)
+        sl = -(-self.seq // n)
+        return type(self)(n_dev=n, BH=self.BH, seq=sl * n, hd=self.hd,
+                          axis=self.axis)
+
+    def state_bytes_per_rank(self):
+        # resident Q/K/V shards (f32)
+        return 4 * 3 * self.BH * self.sl * self.hd
+
     # ------------------------------------------------------------- builders
     def host_baseline(self, mesh):
         """Sequential rounds with an XLA collective-permute between them."""

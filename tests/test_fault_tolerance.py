@@ -1,10 +1,14 @@
-"""Fault tolerance: watchdog, preemption guard, kill+resume equivalence."""
+"""Fault tolerance: watchdog (incident-window decay, tick normalization),
+elastic controller -> degraded schedules, preemption guard, kill+resume
+equivalence."""
 import os
 import signal
 
 import numpy as np
+import pytest
 
-from repro.train.fault_tolerance import PreemptionGuard, StragglerWatchdog
+from repro.train.fault_tolerance import (ElasticController, PreemptionGuard,
+                                         StragglerWatchdog)
 
 
 def test_watchdog_flags_persistent_straggler():
@@ -23,6 +27,88 @@ def test_watchdog_tolerates_jitter():
     flags = [w.record(1.0 + 0.2 * rng.random()) for _ in range(32)]
     assert not any(flags)
     assert not w.should_replace
+
+
+def test_watchdog_incidents_decay_instead_of_latching():
+    """Three blips spread over a long healthy run never arm the trigger
+    (the old monotonic counter latched forever), and an armed trigger
+    decays back to healthy once the blips age out of the window."""
+    w = StragglerWatchdog(window=16, threshold=2.0, min_samples=4,
+                          incident_window=8, replace_after=3)
+    for _ in range(8):
+        w.record(1.0)
+    for _ in range(3):            # blips 10 healthy steps apart
+        assert w.record(5.0)
+        assert not w.should_replace
+        for _ in range(10):
+            w.record(1.0)
+    assert w.incidents == 3       # lifetime total still counts
+    assert w.recent_incidents == 0
+
+    # consecutive blips DO arm it — and then decay clears it again
+    assert w.record(5.0) and w.record(5.0) and w.record(5.0)
+    assert w.should_replace
+    for _ in range(w.incident_window):
+        w.record(1.0)
+    assert not w.should_replace
+
+
+def test_watchdog_normalizes_round_ticks():
+    """A round with 4x the schedule ticks and 4x the wall time is the
+    same per-tick rate — not an incident."""
+    w = StragglerWatchdog(window=16, threshold=2.0, min_samples=4)
+    for _ in range(8):
+        w.record(1.0, ticks=1)
+    assert not w.record(4.0, ticks=4)
+    assert w.record(4.0, ticks=1)          # same time, 1 tick: straggling
+
+
+def test_watchdog_reset_clears_history():
+    w = StragglerWatchdog(window=16, threshold=2.0, min_samples=4)
+    for _ in range(8):
+        w.record(1.0)
+    for _ in range(3):
+        w.record(9.0)
+    assert w.should_replace
+    w.reset()
+    assert not w.should_replace
+    assert w.incidents == 0 and not w.times
+
+
+def test_elastic_controller_drops_and_degrades():
+    """The closed loop: per-rank watchdogs consume round ticks, the
+    persistent straggler is dropped, and the collective schedules degrade
+    onto the survivors (drop the rank, degrade the schedules, keep
+    serving)."""
+    from repro.core.schedule import (make_broadcast_schedule,
+                                     make_ring_schedule, make_schedule)
+
+    ctrl = ElasticController(n_ranks=4, min_samples=4, replace_after=3)
+    healthy = {r: 1.0 for r in range(4)}
+    for _ in range(8):
+        assert ctrl.observe_round(healthy) == ()
+    dropped = []
+    for _ in range(4):            # rank 2 straggles persistently
+        dropped += ctrl.observe_round({0: 1.0, 1: 1.0, 2: 5.0, 3: 1.0})
+    assert dropped == [2]
+    assert ctrl.live_ranks == (0, 1, 3)
+
+    sched = make_schedule((100, 80, 60, 40))
+    dsched = ctrl.degrade(sched)
+    assert dsched.n == 3 and sum(dsched.counts) == sum(sched.counts)
+    assert ctrl.degrade(make_broadcast_schedule(4, 512, 128)).n == 3
+    assert ctrl.degrade(make_ring_schedule(4, 512, 64)).steps == 2
+    # further observations about the dead rank are ignored
+    ctrl.observe_round({2: 50.0, 0: 1.0})
+    assert ctrl.live_ranks == (0, 1, 3)
+
+
+def test_elastic_controller_keeps_last_survivor():
+    ctrl = ElasticController(n_ranks=2)
+    ctrl.drop(0)
+    with pytest.raises(RuntimeError):
+        ctrl.drop(1)
+    assert ctrl.live_ranks == (1,)
 
 
 def test_preemption_guard_catches_sigterm():

@@ -68,6 +68,22 @@ def test_moe_dispatch_8rank():
     assert "flux l3 ok at 8 ranks" in out
 
 
+def test_fault_suite(tmp_path):
+    """Degraded-mode schedules under injected faults: every workload's
+    dropped-peer plan cascades to l3 on the surviving mesh, wire faults
+    are classified (not crashed on), a wedged candidate quarantines, and
+    the healthy-vs-degraded benchmark artifact is emitted."""
+    out_json = tmp_path / "BENCH_faults.json"
+    out = run_script("fault_suite.py", args=["--out", str(out_json)])
+    assert "ALL OK" in out
+    import json
+    bench = json.loads(out_json.read_text())
+    assert set(bench["workloads"]) == {"moe_dispatch", "ring_attention",
+                                       "gemm_allgather", "kv_transfer"}
+    for entry in bench["workloads"].values():
+        assert entry["degraded_ms"] > entry["healthy_ms"] > 0.0
+
+
 def test_sharded_model_equivalence():
     out = run_script("sharded_model_suite.py", devices=8)
     assert "ALL OK" in out

@@ -19,8 +19,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.schedule import (make_broadcast_schedule, make_ring_schedule,
-                                 make_schedule, sanitize_combine_tile,
-                                 sanitize_kv_chunk, sanitize_tile_m)
+                                 make_schedule, respill_counts,
+                                 sanitize_combine_tile, sanitize_kv_chunk,
+                                 sanitize_tile_m)
 
 # ----------------------------------------------------- strategy definitions
 
@@ -175,6 +176,86 @@ def test_ring_ticks_cover_rotation(s):
     if s.fused and s.steps:
         step_rounds = [r for r in s.rounds if r[0] == 0]
         assert len(step_rounds) == s.nc
+
+
+# ------------------------------------------- degraded-mode (fault) schedules
+
+def draw_live(data, n):
+    """A non-empty membership subset of an n-rank schedule."""
+    return tuple(sorted(data.draw(
+        st.sets(st.sampled_from(range(n)), min_size=1), label="live_ranks")))
+
+
+@given(disp_scheds, contexts, st.data())
+@settings(max_examples=200, deadline=None)
+def test_dispatch_degrade_respills_and_keeps_contract(s, ctx, data):
+    """degrade(live) respills the dead experts' tokens (conserving the
+    total) into a smaller DispatchSchedule that re-satisfies the whole
+    lockstep contract — live edges exactly once, total order, window cap."""
+    live = draw_live(data, s.n)
+    d = s.degrade(live)
+    if len(live) == s.n:
+        assert d is s
+        return
+    assert type(d) is type(s) and d.n == len(live)
+    assert sum(d.counts) == sum(s.counts)          # token conservation
+    assert all(c >= 0 for c in d.counts)
+    assert (d.block_tokens, d.tight) == (s.block_tokens, s.tight)
+    rounds = d.rounds
+    assert len(rounds) == len(set(rounds)) == d.n * d.b_max
+    assert set(rounds) == {(off, j) for off in range(d.n)
+                           for j in range(d.b_max)}
+    assert rounds == sorted(rounds)                # lockstep total order
+    assert all(1 <= w <= max(1, ctx) for w in d.send_window_depths(ctx))
+
+
+@given(bcast_scheds, contexts, st.data())
+@settings(max_examples=200, deadline=None)
+def test_broadcast_degrade_splices_and_keeps_contract(s, ctx, data):
+    """degrade(live) splices dead ranks out of the shift permutation:
+    same slab and tiling, offsets over the compacted live order only."""
+    live = draw_live(data, s.n)
+    d = s.degrade(live)
+    if len(live) == s.n:
+        assert d is s
+        return
+    assert type(d) is type(s) and d.n == len(live)
+    assert (d.M_l, d.tile_m, d.fused) == (s.M_l, s.tile_m, s.fused)
+    rounds = d.rounds
+    offs = {(off, t) for off in range(1, d.n)
+            for t in (range(d.nt) if d.fused else (0,))}
+    assert len(rounds) == len(set(rounds)) and set(rounds) == offs
+    assert rounds == sorted(rounds, key=lambda r: (r[1], r[0]))  # tile-major
+    assert d.wire_rows() == (d.n - 1) * d.M_l      # no dead-rank edges
+    assert all(1 <= w <= max(1, ctx) for w in d.send_window_depths(ctx))
+
+
+@given(ring_scheds, contexts, st.data())
+@settings(max_examples=200, deadline=None)
+def test_ring_degrade_splices_and_keeps_contract(s, ctx, data):
+    """degrade(live) closes the ring over the live order: same shard and
+    chunking, len(live)-1 rotation steps, per-step window drain intact."""
+    live = draw_live(data, s.n)
+    d = s.degrade(live)
+    if len(live) == s.n:
+        assert d is s
+        return
+    assert type(d) is type(s) and d.n == len(live)
+    assert (d.rows, d.kv_chunk, d.fused) == (s.rows, s.kv_chunk, s.fused)
+    assert d.steps == len(live) - 1
+    rounds = d.rounds
+    assert len(rounds) == len(set(rounds)) and rounds == sorted(rounds)
+    assert all(1 <= w <= max(1, ctx) for w in d.send_window_depths(ctx))
+
+
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=8), st.data())
+@settings(max_examples=200, deadline=None)
+def test_respill_conserves_tokens(counts, data):
+    live = draw_live(data, len(counts))
+    new = respill_counts(counts, live)
+    assert len(new) == len(live)
+    assert sum(new) == sum(counts)
+    assert all(c >= counts[e] for c, e in zip(new, live))  # survivors keep own
 
 
 # --------------------------------------------------------------- sanitizers
