@@ -1,17 +1,25 @@
 """Shared benchmark utilities: small-shape wall-clock + full-shape modeled
-latency for workload variants."""
-import time
+latency for workload variants, and the one JSON table emitter every fig
+script writes through (``write_rows``)."""
+import json
 
-import jax
-
-
-def wallclock_us(fn, inputs, iters=3):
-    fn(*inputs)                                     # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*inputs))
-    return (time.perf_counter() - t0) / iters * 1e6
+from repro.core.telemetry import wallclock_us  # noqa: F401  (re-export)
 
 
 def modeled_ms(workload, directive, hw):
     return workload.analytic_cost(directive, hw) * 1e3
+
+
+def write_rows(path, rows):
+    """Persist one fig script's ``(name, us_per_call, derived)`` rows as a
+    ``bench-rows/v1`` JSON table (sorted keys, trailing newline — the same
+    diff-stable conventions as BENCH_search.json)."""
+    payload = {
+        "schema": "bench-rows/v1",
+        "rows": [{"name": str(n), "us_per_call": float(us),
+                  "derived": str(d)} for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload

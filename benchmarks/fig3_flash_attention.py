@@ -39,3 +39,19 @@ def run(mesh=None):
                 rows.append((f"fig3/ring_attn_seq{seq}_hd{hd}_{name}",
                              t * 1e3, note))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="also write the table as bench-rows/v1 JSON")
+    args = ap.parse_args()
+    rows = run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.out:
+        from benchmarks.common import write_rows
+        write_rows(args.out, rows)

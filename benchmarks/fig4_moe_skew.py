@@ -77,7 +77,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n-dev", type=int, default=2,
                     help="expert/rank count for the sweep (paper shape: 2)")
+    ap.add_argument("--out", default=None,
+                    help="also write the table as bench-rows/v1 JSON")
     args = ap.parse_args()
+    rows = run(n_dev=args.n_dev)
     print("name,us_per_call,derived")
-    for name, us, derived in run(n_dev=args.n_dev):
+    for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+    if args.out:
+        from benchmarks.common import write_rows
+        write_rows(args.out, rows)

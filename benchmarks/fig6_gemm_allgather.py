@@ -36,3 +36,19 @@ def run(mesh=None):
                 rows.append((f"fig6/gemm_ag_{size}_{link}_{name}", t * 1e3,
                              note))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="also write the table as bench-rows/v1 JSON")
+    args = ap.parse_args()
+    rows = run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.out:
+        from benchmarks.common import write_rows
+        write_rows(args.out, rows)

@@ -12,9 +12,14 @@ from repro.core.design_space import (Directive, CONSERVATIVE, DIMENSIONS,
                                      enumerate_valid)
 from repro.core.hardware import V5E, ChipSpec, HardwareContext, \
     extract_hardware_context
-from repro.core.cost_model import (RooflineReport, parse_collectives,
+from repro.core.cost_model import (CostBreakdown, CostSegment,
+                                   RooflineReport, parse_collectives,
                                    per_tile_exposed_s, roofline_from_compiled,
                                    window_stall_factor)
+from repro.core.trace import (ScheduleProbe, Timeline, TraceWriter,
+                              schedule_timeline, validate_trace)
+from repro.core.telemetry import (EvalRecord, MetricsRegistry,
+                                  SearchTelemetry, wallclock_us)
 from repro.core.schedule import (CollectiveSchedule, BroadcastSchedule,
                                  DispatchSchedule, RingSchedule, SendWindow,
                                  check_live, make_broadcast_schedule,
@@ -39,6 +44,10 @@ __all__ = [
     "V5E", "ChipSpec", "HardwareContext", "extract_hardware_context",
     "RooflineReport", "parse_collectives", "per_tile_exposed_s",
     "roofline_from_compiled", "window_stall_factor",
+    "CostBreakdown", "CostSegment",
+    "ScheduleProbe", "Timeline", "TraceWriter", "schedule_timeline",
+    "validate_trace",
+    "EvalRecord", "MetricsRegistry", "SearchTelemetry", "wallclock_us",
     "CollectiveSchedule", "BroadcastSchedule", "DispatchSchedule",
     "RingSchedule", "SendWindow", "check_live", "make_broadcast_schedule",
     "make_ring_schedule", "make_schedule", "respill_counts", "sanitize_tile",

@@ -47,6 +47,7 @@ class EvalResult:
     fault_report: dict = field(default_factory=dict)  # plan -> healthy/degraded ms
     quarantined: bool = False     # abandoned at the wall-clock deadline
     retries: int = 0              # flaky-l2 re-executions that were needed
+    record: object = None         # telemetry.EvalRecord (every path sets one)
 
     @property
     def ok(self):
@@ -84,6 +85,7 @@ class CascadeEvaluator:
         self.fault_plans = tuple(fault_plans)
         self.fault_weight = fault_weight
         self.quarantine = []          # wedged-candidate diagnostics
+        self.records = []             # telemetry.EvalRecord per evaluation
         key = jax.random.PRNGKey(1234)
         self.inputs = verify_inputs or workload.example_inputs(key, mesh)
         self.expected = workload.reference(*self.inputs)
@@ -109,16 +111,26 @@ class CascadeEvaluator:
         th.start()
         th.join(self.timeout_s)
         if th.is_alive():
+            elapsed = time.perf_counter() - t0
             diag = (f"quarantined: evaluation exceeded {self.timeout_s:.2f}s "
                     "wall-clock (wedged build/execute abandoned)")
+            # flag first: the abandoned thread must not append a late
+            # duplicate record if it ever comes back from the wedge
+            cand._quarantined = True
+            res = EvalResult(0, 0.0, diagnostic=diag, quarantined=True)
+            res = self._record(cand, res, {"quarantine": elapsed},
+                               force=True)
             self.quarantine.append({
                 "cid": cand.cid, "directive": repr(cand.directive),
-                "elapsed_s": time.perf_counter() - t0, "diagnostic": diag})
-            return EvalResult(0, 0.0, diagnostic=diag, quarantined=True)
+                "elapsed_s": elapsed, "diagnostic": diag,
+                "record": res.record.to_dict()})
+            return res
         if "err" in box:
+            elapsed = time.perf_counter() - t0
             e = box["err"]
-            return EvalResult(0, 0.0, diagnostic="evaluator error:\n" + "".join(
+            res = EvalResult(0, 0.0, diagnostic="evaluator error:\n" + "".join(
                 traceback.format_exception(type(e), e, e.__traceback__))[-1500:])
+            return self._record(cand, res, {"error": elapsed})
         return box["res"]
 
     def quarantine_report(self):
@@ -130,24 +142,61 @@ class CascadeEvaluator:
         suites wrap it to inject flaky executions or wire faults."""
         return jfn(*self.inputs)
 
+    def _record(self, cand, res: EvalResult, levels, *, fault_penalty_ms=0.0,
+                force=False) -> EvalResult:
+        """Attach the structured telemetry row for one evaluation; every
+        evaluate path (success, l1/l2 fail, error, quarantine) routes
+        through here. A candidate already quarantined by the deadline
+        watcher is skipped unless ``force``d — the abandoned worker thread
+        must not append a late duplicate."""
+        if getattr(cand, "_quarantined", False) and not force:
+            return res
+        from repro.core.telemetry import EvalRecord
+        try:
+            knobs = dict(self.workload.kernel_knobs(cand.directive))
+        except Exception:
+            knobs = {}
+        rec = EvalRecord(
+            cid=cand.cid, gen=cand.gen, island=cand.island,
+            mutation=cand.mutation, directive=repr(cand.directive),
+            level=res.level, score=res.score,
+            t_model_ms=res.t_model_ms
+            if np.isfinite(res.t_model_ms) else None,
+            t_wall_ms=res.t_wall_ms if np.isfinite(res.t_wall_ms) else None,
+            levels_s={k: float(v) for k, v in levels.items()},
+            retries=res.retries, quarantined=res.quarantined,
+            fault_penalty_ms=float(fault_penalty_ms), knobs=knobs,
+            diagnostic=res.diagnostic,
+            elapsed_s=float(sum(levels.values())))
+        res.record = rec
+        self.records.append(rec)
+        return res
+
     def _evaluate(self, cand: Candidate) -> EvalResult:
         d = cand.directive
+        levels = {}
         # ---- l1: directive validity + build + trace/compile -------------
         viol = self.workload.check(d, self.hw)
         if viol:
-            return EvalResult(0, 0.0, diagnostic="invalid directive: "
-                              + "; ".join(viol))
+            return self._record(
+                cand, EvalResult(0, 0.0, diagnostic="invalid directive: "
+                                 + "; ".join(viol)), levels)
+        t1 = time.perf_counter()
         try:
             fn = self.workload.build(d, self.mesh)
             jfn = jax.jit(fn)
             lowered = jfn.lower(*self.inputs)
             cand.code_text = lowered.as_text()[:200_000]
         except Exception:
-            return EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
-                              + traceback.format_exc()[-1500:])
+            levels["l1"] = time.perf_counter() - t1
+            return self._record(
+                cand, EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
+                                 + traceback.format_exc()[-1500:]), levels)
+        levels["l1"] = time.perf_counter() - t1
         # ---- l2: numerical verification ---------------------------------
         # transient execution errors retry with backoff; a deterministic
         # verify mismatch below never does
+        t2 = time.perf_counter()
         retries = 0
         while True:
             try:
@@ -155,9 +204,12 @@ class CascadeEvaluator:
                 break
             except Exception:
                 if retries >= self.l2_retries:
-                    return EvalResult(1, 0.0, retries=retries,
-                                      diagnostic="l2 execution failed:\n"
-                                      + traceback.format_exc()[-1500:])
+                    levels["l2"] = time.perf_counter() - t2
+                    return self._record(
+                        cand, EvalResult(1, 0.0, retries=retries,
+                                         diagnostic="l2 execution failed:\n"
+                                         + traceback.format_exc()[-1500:]),
+                        levels)
                 retries += 1
                 time.sleep(self.backoff_s * retries)
         tol = self.rtol
@@ -168,15 +220,23 @@ class CascadeEvaluator:
             got = np.asarray(got, np.float32)
             exp = np.asarray(exp, np.float32)
             if not np.all(np.isfinite(got)):
-                return EvalResult(1, 0.0, retries=retries, diagnostic=(
-                    "l2 verify failed: non-finite values (deadlock-free "
-                    "but corrupt transfer — check completion/ordering)"))
+                levels["l2"] = time.perf_counter() - t2
+                return self._record(
+                    cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
+                        "l2 verify failed: non-finite values (deadlock-free "
+                        "but corrupt transfer — check completion/ordering)")),
+                    levels)
             err = np.max(np.abs(got - exp)) / (np.max(np.abs(exp)) + 1e-9)
             if err > tol:
-                return EvalResult(1, 0.0, retries=retries, diagnostic=(
-                    f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
-                    f"(placement={d.placement}, completion={d.completion})"))
+                levels["l2"] = time.perf_counter() - t2
+                return self._record(
+                    cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
+                        f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
+                        f"(placement={d.placement}, "
+                        f"completion={d.completion})")), levels)
+        levels["l2"] = time.perf_counter() - t2
         # ---- l3: benchmark ----------------------------------------------
+        t3 = time.perf_counter()
         t_model = self.workload.analytic_cost(d, self.hw)
         t_ms = t_model * 1e3
         fault_report = {}
@@ -193,14 +253,16 @@ class CascadeEvaluator:
             pens = [max(0.0, e["degraded_ms"] - e["healthy_ms"])
                     for e in fault_report.values()]
             t_eff = t_ms + self.fault_weight * sum(pens) / len(pens)
+        levels["l3"] = time.perf_counter() - t3
         t_wall = float("inf")
         if self.wallclock:
-            jfn(*self.inputs)
-            t0 = time.perf_counter()
-            for _ in range(3):
-                jax.block_until_ready(jfn(*self.inputs))
-            t_wall = (time.perf_counter() - t0) / 3 * 1e3
-        return EvalResult(3, 10000.0 / (1.0 + t_eff), t_model_ms=t_ms,
-                          t_wall_ms=t_wall, fault_report=fault_report,
-                          retries=retries,
-                          diagnostic=f"ok: modeled {t_ms:.3f} ms")
+            from repro.core.telemetry import wallclock_us
+            tw = time.perf_counter()
+            t_wall = wallclock_us(jfn, self.inputs) / 1e3
+            levels["wallclock"] = time.perf_counter() - tw
+        return self._record(
+            cand, EvalResult(3, 10000.0 / (1.0 + t_eff), t_model_ms=t_ms,
+                             t_wall_ms=t_wall, fault_report=fault_report,
+                             retries=retries,
+                             diagnostic=f"ok: modeled {t_ms:.3f} ms"),
+            levels, fault_penalty_ms=t_eff - t_ms)

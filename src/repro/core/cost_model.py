@@ -80,6 +80,59 @@ class CollectiveOp:
                 f"wire={self.wire_bytes/2**20:9.2f} MiB")
 
 
+# ------------------------------------------------ auditable cost breakdown
+#
+# The l3 analytic models used to return one opaque float; the observability
+# layer (core/trace.py) needs the *composition* — which modeled milliseconds
+# are compute, wire, overlap span, window stall, sync, launch. Workloads now
+# build a CostBreakdown (ordered segments whose sum IS the analytic cost)
+# and derive ``analytic_cost`` from it, so the timeline rendered from the
+# breakdown is equal to the scalar the cascade scores by construction — the
+# cost model becomes auditable instead of a scalar.
+
+SEGMENT_KINDS = ("compute", "wire", "overlap", "stall", "sync", "launch",
+                 "quant", "recovery", "remesh", "total")
+
+
+@dataclass(frozen=True)
+class CostSegment:
+    """One named slice of the modeled critical path. ``kind`` categorizes
+    the slice for the trace renderer (``SEGMENT_KINDS``); ``meta`` carries
+    free-form detail (e.g. the compute/wire terms an ``overlap`` span
+    hides)."""
+    name: str
+    dur_s: float
+    kind: str = "compute"
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class CostBreakdown:
+    """The ordered decomposition of one directive's l3 analytic cost.
+
+    ``total`` is the plain left-fold sum of the segments — workloads return
+    it from ``analytic_cost``, and ``core/trace.py::schedule_timeline``
+    lays the same segments out as trace spans, so the trace's critical-path
+    sum equals ``analytic_cost()`` by construction. ``schedule`` (when the
+    directive is kernelized) is the trace-time ``CollectiveSchedule`` the
+    renderer draws DMA-round / send-window / arrival-tick detail tracks
+    from; ``knobs`` is the ``kernel_knobs`` mapping that built it."""
+    segments: tuple
+    schedule: object = None       # CollectiveSchedule | None
+    knobs: dict = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def total(self) -> float:
+        return sum(s.dur_s for s in self.segments)
+
+    def segment(self, name):
+        for s in self.segments:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
 def per_tile_exposed_s(wire_bytes, link_bw, tiles) -> float:
     """Per-tile fused-communication credit (the FLUX/CoCoNet TILE_FUSED
     point): when a transfer is issued per output tile from inside the

@@ -53,6 +53,10 @@ class SearchResult:
     meta: MetaSummarizer
     seed_score: float
     history: list
+    # per-generation/per-island series + mutation win rates aggregated from
+    # the cascade's EvalRecords (core/telemetry.py::SearchTelemetry); the
+    # source of the BENCH_search.json artifact
+    telemetry: object = None
 
     def best_per_generation(self):
         out = {}
@@ -96,6 +100,7 @@ def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
         meta.observe(cand)
         islands.append(Island(idx=i, population=[cand]))
     seed_score = islands[0].population[0].score
+    coverage = {0: archive.coverage()}     # per-gen archive coverage series
 
     recommendations = []
     for gen in range(1, cfg.generations + 1):
@@ -141,10 +146,15 @@ def slow_path(seed, mesh, hw, cfg: SlowPathConfig = None, *,
                     dst.population.append(t)
         if gen % cfg.meta_every == 0:
             _, recommendations = meta.summarize(gen, db)
+        coverage[gen] = archive.coverage()
 
     best = db.best
+    from repro.core.telemetry import SearchTelemetry
+    telemetry = SearchTelemetry.from_candidates(
+        db.records, workload=wl.name, coverage=coverage)
     return SearchResult(best=best, db=db, archive=archive, meta=meta,
-                        seed_score=seed_score, history=db.history())
+                        seed_score=seed_score, history=db.history(),
+                        telemetry=telemetry)
 
 
 def _tunable_space(wl):

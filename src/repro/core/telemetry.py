@@ -1,0 +1,355 @@
+"""Structured search/cascade/serving telemetry — the second half of the
+observability layer (core/trace.py renders modeled time; this module
+records *decisions*: what every candidate scored, why, and how long each
+cascade level took).
+
+* :func:`wallclock_us` — the one compile-warm-then-timed-loop wall-clock
+  helper (``benchmarks/common.py`` and ``CascadeEvaluator`` both
+  previously inlined it).
+* :class:`EvalRecord` — one structured row per evaluated candidate: level
+  reached, per-level wall timings, retries, quarantine, fault penalty,
+  resolved kernel knobs. Captured inside ``CascadeEvaluator`` for every
+  path — success, l1/l2 failure, evaluator error, and timeout quarantine
+  — and JSON round-trippable (non-finite floats map to ``null``).
+* :class:`SearchTelemetry` — aggregates the records of one ``slow_path``
+  run into per-generation / per-island series (best & mean score, archive
+  coverage, quarantine and retry counts, mutation-operator win rates) and
+  emits the checked-in ``BENCH_search.json`` artifact (ROADMAP open item:
+  track the perf story PR-over-PR). The payload keeps only
+  run-deterministic fields — wall-clock timings stay out so regenerating
+  the artifact on any machine is diff-stable.
+* :class:`MetricsRegistry` — counters / gauges / histograms with a JSON
+  snapshot, wired through ``serve/engine.py`` (step-latency histogram,
+  tokens/step, watchdog incidents) and
+  ``train/fault_tolerance.py::ElasticController`` (straggler incidents,
+  degrade events, live-rank gauge).
+
+Pure Python except :func:`wallclock_us` (imports jax lazily), mirroring
+core/schedule.py.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field, replace
+
+__all__ = [
+    "wallclock_us", "EvalRecord", "SearchTelemetry", "MetricsRegistry",
+]
+
+
+def wallclock_us(fn, inputs, iters=3):
+    """Small-shape wall-clock of ``fn(*inputs)`` in microseconds: one
+    compile-and-warm call, then the mean of ``iters`` timed iterations."""
+    import jax
+    fn(*inputs)                                     # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*inputs))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _jsonable(x):
+    """None-preserving float for JSON: non-finite -> None (exact
+    round-trip; JSON has no inf/nan)."""
+    if x is None:
+        return None
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+@dataclass
+class EvalRecord:
+    """One candidate's structured evaluation row (see module docstring).
+
+    ``levels_s`` maps cascade level name ("l1", "l2", "l3", "wallclock")
+    to the wall seconds that level took; ``t_model_ms``/``t_wall_ms`` are
+    ``None`` (not inf) when the level was never reached, so the record
+    round-trips JSON exactly."""
+    cid: int = -1
+    gen: int = 0
+    island: int = 0
+    mutation: str = "seed"
+    directive: str = ""
+    level: int = 0
+    score: float = 0.0
+    t_model_ms: float | None = None
+    t_wall_ms: float | None = None
+    levels_s: dict = field(default_factory=dict)
+    retries: int = 0
+    quarantined: bool = False
+    fault_penalty_ms: float = 0.0
+    knobs: dict = field(default_factory=dict)
+    diagnostic: str = ""
+    elapsed_s: float = 0.0
+
+    def to_dict(self):
+        return {
+            "cid": int(self.cid), "gen": int(self.gen),
+            "island": int(self.island), "mutation": str(self.mutation),
+            "directive": str(self.directive), "level": int(self.level),
+            "score": float(self.score),
+            "t_model_ms": _jsonable(self.t_model_ms),
+            "t_wall_ms": _jsonable(self.t_wall_ms),
+            "levels_s": {k: float(v) for k, v in self.levels_s.items()},
+            "retries": int(self.retries),
+            "quarantined": bool(self.quarantined),
+            "fault_penalty_ms": float(self.fault_penalty_ms),
+            "knobs": dict(self.knobs),
+            "diagnostic": str(self.diagnostic),
+            "elapsed_s": float(self.elapsed_s),
+        }
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+    def to_json(self):
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_json(cls, s):
+        return cls.from_dict(json.loads(s))
+
+
+# ------------------------------------------------------------ search series
+
+
+class SearchTelemetry:
+    """Aggregates one search run's :class:`EvalRecord` stream.
+
+    ``observe`` ingests records in evaluation order (the win-rate
+    accounting is order-sensitive: a record *wins* when it strictly beats
+    the best score seen before it); ``note_coverage`` stamps the archive
+    coverage after a generation closes."""
+
+    def __init__(self, workload=""):
+        self.workload = str(workload)
+        self.records = []
+        self.coverage = {}           # gen -> archive cells occupied
+        self._best = 0.0
+        self._wins = {}              # mutation form -> win count
+
+    def observe(self, record: EvalRecord):
+        self.records.append(record)
+        if record.score > self._best:
+            self._best = record.score
+            self._wins[record.mutation] = \
+                self._wins.get(record.mutation, 0) + 1
+
+    def note_coverage(self, gen, coverage):
+        self.coverage[int(gen)] = float(coverage)
+
+    # ------------------------------------------------------------- series
+    def generation_series(self):
+        gens = sorted({r.gen for r in self.records})
+        out = []
+        for g in gens:
+            rs = [r for r in self.records if r.gen == g]
+            scored = [r.score for r in rs]
+            out.append({
+                "gen": g,
+                "evals": len(rs),
+                "best_score": max(scored),
+                "mean_score": sum(scored) / len(scored),
+                "ok": sum(1 for r in rs if r.level >= 3),
+                "quarantined": sum(1 for r in rs if r.quarantined),
+                "retries": sum(r.retries for r in rs),
+                "archive_coverage": self.coverage.get(g),
+            })
+        return out
+
+    def island_series(self):
+        isls = sorted({r.island for r in self.records})
+        out = []
+        for i in isls:
+            rs = [r for r in self.records if r.island == i]
+            out.append({
+                "island": i,
+                "evals": len(rs),
+                "best_score": max(r.score for r in rs),
+                "mean_score": sum(r.score for r in rs) / len(rs),
+                "quarantined": sum(1 for r in rs if r.quarantined),
+            })
+        return out
+
+    def mutation_stats(self):
+        """Per-mutation-operator attempt/success/win table. A *win* is a
+        new global best at observe time — the cross-strategy signal the
+        meta-summarizer coordinates on."""
+        forms = sorted({r.mutation for r in self.records})
+        out = []
+        for f in forms:
+            rs = [r for r in self.records if r.mutation == f]
+            out.append({
+                "mutation": f,
+                "attempts": len(rs),
+                "ok": sum(1 for r in rs if r.level >= 3),
+                "wins": self._wins.get(f, 0),
+                "win_rate": self._wins.get(f, 0) / len(rs),
+            })
+        return out
+
+    # ------------------------------------------------------------ artifact
+    def payload(self, meta=None):
+        """The ``BENCH_search.json`` payload: deterministic aggregates
+        only (wall-clock fields excluded — regenerating on any machine
+        must be diff-stable for a checked-in artifact)."""
+        best = max(self.records, key=lambda r: r.score, default=None)
+        return {
+            "schema": "bench-search/v1",
+            "workload": self.workload,
+            "meta": dict(meta or {}),
+            "totals": {
+                "evals": len(self.records),
+                "ok": sum(1 for r in self.records if r.level >= 3),
+                "quarantined": sum(1 for r in self.records if r.quarantined),
+                "retries": sum(r.retries for r in self.records),
+                "best_score": self._best,
+            },
+            "best": None if best is None else {
+                "cid": best.cid, "gen": best.gen, "island": best.island,
+                "mutation": best.mutation, "directive": best.directive,
+                "score": best.score, "t_model_ms": _jsonable(best.t_model_ms),
+                "knobs": dict(best.knobs),
+            },
+            "generations": self.generation_series(),
+            "islands": self.island_series(),
+            "mutations": self.mutation_stats(),
+        }
+
+    def write(self, path, meta=None):
+        with open(path, "w") as f:
+            json.dump(self.payload(meta), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def from_candidates(cls, candidates, workload="", coverage=None):
+        """Build telemetry from evaluated ``Candidate``s (the slow-path
+        aggregation seam): candidates whose results carry an attached
+        :class:`EvalRecord` contribute it; results from a custom evaluator
+        without records are synthesized from the candidate itself."""
+        tel = cls(workload)
+        for c in candidates:
+            rec = getattr(c.result, "record", None) if c.result else None
+            if rec is None:
+                res = c.result
+                rec = EvalRecord(
+                    cid=c.cid, gen=c.gen, island=c.island,
+                    mutation=c.mutation, directive=repr(c.directive),
+                    level=res.level if res else 0,
+                    score=res.score if res else 0.0,
+                    t_model_ms=_jsonable(res.t_model_ms) if res else None,
+                    t_wall_ms=_jsonable(res.t_wall_ms) if res else None,
+                    retries=res.retries if res else 0,
+                    quarantined=bool(res and res.quarantined),
+                    diagnostic=res.diagnostic if res else "never evaluated")
+            else:
+                rec = replace(rec)          # observe order owns win stats
+            tel.observe(rec)
+        for g, cov in (coverage or {}).items():
+            tel.note_coverage(g, cov)
+        return tel
+
+
+# ----------------------------------------------------------------- metrics
+
+
+class _Counter:
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v=1.0):
+        self.value += v
+
+
+class _Gauge:
+    def __init__(self):
+        self.value = None
+
+    def set(self, v):
+        self.value = float(v)
+
+
+class _Histogram:
+    """Stores observations and reports count/sum/mean and interpolated
+    quantiles — small-cardinality serving metrics, not a streaming
+    sketch. ``max_samples`` bounds memory via reservoir-free decimation
+    (keep every other sample once full; fine for step-latency series)."""
+
+    def __init__(self, max_samples=4096):
+        self.samples = []
+        self.count = 0
+        self.total = 0.0
+        self.max_samples = int(max_samples)
+
+    def observe(self, v):
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.samples.append(v)
+        if len(self.samples) > self.max_samples:
+            self.samples = self.samples[::2]
+
+    def quantile(self, q):
+        if not self.samples:
+            return None
+        s = sorted(self.samples)
+        if len(s) == 1:
+            return s[0]
+        pos = (len(s) - 1) * min(1.0, max(0.0, float(q)))
+        lo = int(pos)
+        hi = min(lo + 1, len(s) - 1)
+        frac = pos - lo
+        return s[lo] * (1 - frac) + s[hi] * frac
+
+    def summary(self):
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "mean": self.total / self.count if self.count else None,
+            "p50": self.quantile(0.50),
+            "p90": self.quantile(0.90),
+            "p99": self.quantile(0.99),
+            "max": max(self.samples) if self.samples else None,
+        }
+
+
+class MetricsRegistry:
+    """Minimal counter/gauge/histogram registry with a JSON snapshot.
+
+    Instruments fetch-or-create by name (``registry.counter("tokens")``),
+    so call sites never pre-declare; ``snapshot()`` is a plain dict ready
+    for ``json.dump``."""
+
+    def __init__(self):
+        self._counters = {}
+        self._gauges = {}
+        self._histograms = {}
+
+    def counter(self, name) -> _Counter:
+        return self._counters.setdefault(str(name), _Counter())
+
+    def gauge(self, name) -> _Gauge:
+        return self._gauges.setdefault(str(name), _Gauge())
+
+    def histogram(self, name, max_samples=4096) -> _Histogram:
+        return self._histograms.setdefault(str(name),
+                                           _Histogram(max_samples))
+
+    def snapshot(self):
+        return {
+            "counters": {k: c.value for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.value for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._histograms.items())},
+        }
+
+    def to_json(self, indent=None):
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def write(self, path, indent=2):
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=indent))
+            f.write("\n")

@@ -63,7 +63,8 @@ from repro.core.schedule import (BroadcastSchedule, SendWindow,  # noqa: F401
 
 
 def _ga_kernel(a_ref, b_ref, o_ref, atile, bbuf, ctile, ssem, rsem,
-               *, axis, sched: BroadcastSchedule, counter, contexts):
+               *, axis, sched: BroadcastSchedule, counter, contexts,
+               probe=None):
     n, M_l, tm, nt = sched.n, sched.M_l, sched.tile_m, sched.nt
     N = b_ref.shape[1]
     me = jax.lax.axis_index(axis)
@@ -101,16 +102,39 @@ def _ga_kernel(a_ref, b_ref, o_ref, atile, bbuf, ctile, ssem, rsem,
         sync_copy(ctile, o_ref.at[pl.ds(me * M_l + t * tm, tm)])
 
     def wait_arrivals(off, rows):
+        recv_probe()
         src = jax.lax.rem(me - off + n, n)
         pltpu.semaphore_wait(rsem.at[src], rows * N)
 
     # contexts-deep send window over the trace-time round order (the shared
     # schedule.SendWindow): every DMA is issued unconditionally (lockstep
     # rule), the window only bounds how many rounds' send semaphores stay
-    # unawaited.
-    window = SendWindow(contexts)
+    # unawaited. An attached ScheduleProbe (core/trace.py) records the
+    # trace-time issue/wait order for the observed-vs-modeled check.
+    if probe is None:
+        window = SendWindow(contexts)
+        recv_probe = lambda: None
+    else:
+        # the probe must observe the window's true order — retire-oldest
+        # strictly before the new round starts — so both hooks record
+        pending = []
+
+        def _start(cps):
+            probe.issue(*pending.pop(0))
+            for cp in cps:
+                cp.start()
+
+        def _retire(cps):
+            probe.wait_send()
+            for cp in cps:
+                cp.wait_send()
+
+        window = SendWindow(contexts, start=_start, wait=_retire)
+        recv_probe = probe.wait_recv
 
     def issue(off, rel, rows):
+        if probe is not None:
+            pending.append((off, rel // rows))
         window.push([edge_dma(off, rel, rows)])
 
     if sched.fused:
@@ -146,12 +170,14 @@ def _ga_kernel(a_ref, b_ref, o_ref, atile, bbuf, ctile, ssem, rsem,
 
 def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
                            n_dev=None, tile_m=128, fused=True, counter=False,
-                           contexts=2, interpret=None):
+                           contexts=2, interpret=None, probe=None):
     """Per-device fn (under shard_map). a: (M_l, K) local; b: (K, N)
     replicated. Returns (n_dev*M_l, N) — the full gathered GEMM output on
     every device. An explicit ``sched`` takes precedence: the
     ``n_dev``/``tile_m``/``fused`` knobs are consulted only to build one
-    when ``sched`` is None."""
+    when ``sched`` is None. ``probe`` (a ``core/trace.py::ScheduleProbe``)
+    records the trace-time DMA issue/wait order for the observed-vs-modeled
+    schedule check."""
     M_l, K = a.shape
     N = b.shape[1]
     if sched is None:
@@ -161,7 +187,8 @@ def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
     assert sched.M_l == M_l, (sched.M_l, M_l)
     assert M_l % sched.tile_m == 0, (M_l, sched.tile_m)
     kern = functools.partial(_ga_kernel, axis=axis, sched=sched,
-                             counter=bool(counter), contexts=contexts)
+                             counter=bool(counter), contexts=contexts,
+                             probe=probe)
     ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
@@ -181,10 +208,12 @@ def gemm_allgather_sharded(a, b, *, axis, sched: BroadcastSchedule = None,
 
 
 def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True,
-                   counter=False, contexts=2):
+                   counter=False, contexts=2, probe=None):
     """Global entry: a_shards (n, M_l, K) sharded over axis; b replicated.
     ``tile_m`` is sanitized to a divisor of M_l; ``counter`` selects
-    per-tile completion ticks (the FLUX point) on the fused path."""
+    per-tile completion ticks (the FLUX point) on the fused path. ``probe``
+    (a ``core/trace.py::ScheduleProbe``) records the trace-time DMA
+    issue/wait order for ``probe.check(sched, contexts)``."""
     from jax.sharding import PartitionSpec as P
     n_dev = mesh.shape[axis]
     sched = make_broadcast_schedule(n_dev, a_shards.shape[1], tile_m, fused)
@@ -193,7 +222,8 @@ def gemm_allgather(a_shards, b, mesh, *, axis="x", tile_m=128, fused=True,
                        out_specs=P(axis), check_vma=False)
     def run(a, bb):
         out = gemm_allgather_sharded(a[0], bb, axis=axis, sched=sched,
-                                     counter=counter, contexts=contexts)
+                                     counter=counter, contexts=contexts,
+                                     probe=probe)
         return out[None]
 
     return run(a_shards, b)

@@ -16,6 +16,11 @@ same seed reproduces the stream exactly.
 An optional :class:`repro.train.fault_tolerance.StragglerWatchdog` receives
 per-decode-step wall times — the serving side of the elastic fault loop
 (``should_replace`` -> drop the rank, degrade the schedules, keep serving).
+
+Serving metrics ride a :class:`repro.core.telemetry.MetricsRegistry`
+(``metrics=``, one created per engine otherwise): decode step-latency
+histogram, prefill latency, tokens generated, decode steps, and watchdog
+incidents — ``engine.metrics.snapshot()`` is the JSON-ready view.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core.telemetry import MetricsRegistry
 from repro.models import StepOptions, decode_step, prefill_step
 
 
@@ -42,12 +48,13 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg, params, serve_cfg: ServeConfig, rules=None,
-                 watchdog=None):
+                 watchdog=None, metrics=None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
         self.rules = rules
         self.watchdog = watchdog          # optional StragglerWatchdog
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._prefill = jax.jit(
             lambda p, b: prefill_step(p, b, cfg, rules,
@@ -74,13 +81,28 @@ class Engine:
         tok = self._sample(logits, self._next_key())
         if self.watchdog is not None:
             jax.block_until_ready(tok)
-            self.watchdog.record(time.perf_counter() - t0)
+            step_s = time.perf_counter() - t0
+            if self.watchdog.record(step_s):
+                self.metrics.counter("serve.watchdog_incidents").inc()
+        else:
+            step_s = time.perf_counter() - t0
+        self.metrics.histogram("serve.decode_step_ms").observe(step_s * 1e3)
+        self.metrics.counter("serve.decode_steps").inc()
+        self.metrics.counter("serve.tokens_generated").inc(
+            int(tok.shape[0]))
         return tok, cache
 
     def prefill(self, batch):
         """batch: {"tokens": (B, S0), ...} -> (first_token, cache, pos)."""
+        t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch)
         tok = self._sample(logits, self._next_key())
+        jax.block_until_ready(tok)
+        self.metrics.histogram("serve.prefill_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        self.metrics.counter("serve.prefills").inc()
+        self.metrics.counter("serve.prefill_tokens").inc(
+            int(batch["tokens"].shape[0] * batch["tokens"].shape[1]))
         return tok, cache, batch["tokens"].shape[1]
 
     def generate(self, batch, max_new_tokens):
@@ -98,6 +120,7 @@ class Engine:
         On hardware the KV blocks ride the device-initiated kv_shuttle
         (repro.kernels.kv_shuttle); the engine hands over the pytree."""
         tok, cache, pos = self.prefill(batch)
+        self.metrics.counter("serve.kv_handoffs").inc()
         return {"first_token": tok, "cache": cache, "pos": pos}
 
     def decode_from_handoff(self, handoff, max_new_tokens):

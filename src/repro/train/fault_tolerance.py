@@ -118,15 +118,26 @@ class ElasticController:
     tick accounting from the schedules, a rank whose watchdog trips is
     dropped from the live set, and :meth:`degrade` maps any
     ``CollectiveSchedule`` (or workload) onto the survivors — drop the
-    rank, degrade the schedules, keep serving."""
+    rank, degrade the schedules, keep serving.
+
+    Fleet health is exported through ``metrics`` (a
+    ``core.telemetry.MetricsRegistry``, one created per controller
+    otherwise): straggler-incident and dropped-rank counters, a
+    ``elastic.live_ranks`` gauge, per-rank step-time histograms, and a
+    degrade-event counter — ``controller.metrics.snapshot()`` is the
+    JSON-ready fleet view."""
     n_ranks: int
     window: int = 32
     threshold: float = 2.0
     min_samples: int = 8
     incident_window: int = 16
     replace_after: int = 3
+    metrics: object = None
 
     def __post_init__(self):
+        if self.metrics is None:
+            from repro.core.telemetry import MetricsRegistry
+            self.metrics = MetricsRegistry()
         self._live = list(range(self.n_ranks))
         self.watchdogs = {
             r: StragglerWatchdog(
@@ -135,6 +146,7 @@ class ElasticController:
                 incident_window=self.incident_window,
                 replace_after=self.replace_after)
             for r in self._live}
+        self.metrics.gauge("elastic.live_ranks").set(len(self._live))
 
     @property
     def live_ranks(self):
@@ -148,7 +160,10 @@ class ElasticController:
         for r in sorted(times_by_rank):
             if r not in self._live:
                 continue
-            self.watchdogs[r].record(times_by_rank[r], ticks=ticks)
+            self.metrics.histogram("elastic.step_ms").observe(
+                float(times_by_rank[r]) * 1e3)
+            if self.watchdogs[r].record(times_by_rank[r], ticks=ticks):
+                self.metrics.counter("elastic.straggler_incidents").inc()
             if self.watchdogs[r].should_replace:
                 self.drop(r)
                 dropped.append(r)
@@ -162,8 +177,11 @@ class ElasticController:
                 raise RuntimeError("cannot drop the last live rank")
             self._live.remove(rank)
             self.watchdogs[rank].reset()
+            self.metrics.counter("elastic.ranks_dropped").inc()
+            self.metrics.gauge("elastic.live_ranks").set(len(self._live))
 
     def degrade(self, schedule_or_workload):
         """Map a ``CollectiveSchedule`` (or a ``Workload``) onto the
         current live set via its ``degrade(live_ranks)`` contract."""
+        self.metrics.counter("elastic.degrade_events").inc()
         return schedule_or_workload.degrade(self.live_ranks)

@@ -83,6 +83,19 @@ class Workload:
     def analytic_cost(self, directive: Directive, hw) -> float:
         raise NotImplementedError
 
+    def cost_breakdown(self, directive: Directive, hw):
+        """Ordered ``CostSegment`` decomposition of ``analytic_cost`` — the
+        auditable form ``core/trace.py::schedule_timeline`` renders. The
+        four shipped workloads implement this and derive ``analytic_cost``
+        from ``CostBreakdown.total`` (so trace critical path == l3 scalar by
+        construction); the base default wraps a directly-implemented
+        ``analytic_cost`` in a single opaque segment so third-party
+        workloads stay traceable without opting in."""
+        from repro.core.cost_model import CostBreakdown, CostSegment
+        return CostBreakdown(segments=(
+            CostSegment("analytic_total", float(self.analytic_cost(directive, hw)),
+                        "total"),))
+
     def default_tunables(self):
         return {}
 

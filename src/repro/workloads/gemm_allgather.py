@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
+from repro.core.cost_model import (CostBreakdown, CostSegment,
+                                   per_tile_exposed_s, window_stall_factor)
 from repro.core.design_space import Directive
 from repro.kernels.gemm_allgather import (gemm_allgather as ga_kernel,
                                           make_broadcast_schedule,
@@ -155,6 +156,10 @@ class GemmAllGather(Workload):
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
+        return self.cost_breakdown(d, hw).total
+
+    def cost_breakdown(self, d: Directive, hw) -> CostBreakdown:
+        Seg = CostSegment
         n = self.n_dev
         M_l = self.M // n
         t_gemm = 2.0 * M_l * self.K * self.N / hw.chip.peak_bf16_flops
@@ -167,9 +172,22 @@ class GemmAllGather(Workload):
                 per = t_gemm / chunks
                 pw = t_wire / chunks
                 # chunk c's gather overlaps chunk c+1's GEMM
-                return per + max((chunks - 1) * per, (chunks - 1) * pw) + pw \
-                    + sync + KERNEL_LAUNCH * 2
-            return t_gemm + t_wire + sync + KERNEL_LAUNCH * 2
+                return CostBreakdown(segments=(
+                    Seg("gemm_chunk0", per, "compute"),
+                    Seg("gather_overlap",
+                        max((chunks - 1) * per, (chunks - 1) * pw), "overlap",
+                        meta={"compute_s": (chunks - 1) * per,
+                              "wire_s": (chunks - 1) * pw, "chunks": chunks}),
+                    Seg("gather_tail", pw, "wire"),
+                    Seg("sync", sync, "sync"),
+                    Seg("launch", KERNEL_LAUNCH * 2, "launch"),
+                ), meta={"path": "xla_stream_split"})
+            return CostBreakdown(segments=(
+                Seg("gemm", t_gemm, "compute"),
+                Seg("all_gather", t_wire, "wire"),
+                Seg("sync", sync, "sync"),
+                Seg("launch", KERNEL_LAUNCH * 2, "launch"),
+            ), meta={"path": "xla_deferred"})
 
         # kernelized (PALLAS_RDMA / HYBRID): one fused launch; the schedule
         # charges TILE_SYNC per issued broadcast round and per completion
@@ -183,8 +201,13 @@ class GemmAllGather(Workload):
             sync = 0.0        # readiness IS the per-tile ticks below
         else:
             sync = SIGNAL_OVERHEAD * max(1, n - 1)
-        fixed = sync + KERNEL_LAUNCH \
-            + (sched.issued_rounds() + ticks) * TILE_SYNC
+        tail = (
+            Seg("sync", sync, "sync"),
+            Seg("launch", KERNEL_LAUNCH, "launch"),
+            Seg("tile_sync", (sched.issued_rounds() + ticks) * TILE_SYNC,
+                "sync", meta={"issued_rounds": sched.issued_rounds(),
+                              "ticks": ticks}),
+        )
         if k["fused"]:
             # FLUX credit: tile t's broadcast hides behind tile t+1's GEMM
             # — only the final tile's transfer stays exposed
@@ -195,9 +218,17 @@ class GemmAllGather(Workload):
             per_gemm = t_gemm / max(1, sched.nt)
             span = max(t_gemm, per_gemm + t_wire)
             window = window_stall_factor(k["contexts"])
-            return span + window * per_tile_exposed_s(
-                wire, hw.chip.ici_link_bw, sched.issued_rounds()) + fixed
+            return CostBreakdown(segments=(
+                Seg("fused_span", span, "overlap",
+                    meta={"compute_s": t_gemm, "wire_s": per_gemm + t_wire}),
+                Seg("window_stall", window * per_tile_exposed_s(
+                    wire, hw.chip.ici_link_bw, sched.issued_rounds()),
+                    "stall", meta={"contexts": k["contexts"]}),
+            ) + tail, schedule=sched, knobs=k, meta={"path": "kernel_fused"})
         # DEFERRED slab path: comm strictly after compute; the window
         # pipelines the per-peer slabs on the wire but the serial
         # dependence on the full GEMM remains.
-        return t_gemm + t_wire + fixed
+        return CostBreakdown(segments=(
+            Seg("gemm", t_gemm, "compute"),
+            Seg("slab_broadcast", t_wire, "wire"),
+        ) + tail, schedule=sched, knobs=k, meta={"path": "kernel_deferred"})

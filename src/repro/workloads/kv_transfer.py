@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
+from repro.core.cost_model import (CostBreakdown, CostSegment,
+                                   per_tile_exposed_s, window_stall_factor)
 from repro.core.design_space import Directive
 from repro.core.schedule import make_ring_schedule
 from repro.kernels.kv_shuttle import kv_shuttle as shuttle_kernel
@@ -184,21 +185,39 @@ class KVTransfer(Workload):
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
+        return self.cost_breakdown(d, hw).total
+
+    def cost_breakdown(self, d: Directive, hw) -> CostBreakdown:
+        Seg = CostSegment
         T, dd, dk = self.T, self.d, self.dk
         t_gemm = 2.0 * T * dd * dk / hw.chip.peak_bf16_flops
         t_send = T * dk * 2 / hw.chip.ici_link_bw
         if self.solo:
             # colocated fallback: both GEMMs, no wire (fault_cost adds the
             # dead tier's cache recovery on top)
-            return 2 * t_gemm + KERNEL_LAUNCH
+            return CostBreakdown(segments=(
+                Seg("kv_gemms", 2 * t_gemm, "compute"),
+                Seg("launch", KERNEL_LAUNCH, "launch"),
+            ), meta={"path": "solo"})
         sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 # K send overlaps V GEMM; V send exposed
-                return (t_gemm + max(t_send, t_gemm) + t_send + sync
-                        + 2 * KERNEL_LAUNCH)
+                return CostBreakdown(segments=(
+                    Seg("k_gemm", t_gemm, "compute"),
+                    Seg("k_send_overlap", max(t_send, t_gemm), "overlap",
+                        meta={"wire_s": t_send, "compute_s": t_gemm}),
+                    Seg("v_send", t_send, "wire"),
+                    Seg("sync", sync, "sync"),
+                    Seg("launch", 2 * KERNEL_LAUNCH, "launch"),
+                ), meta={"path": "xla_stream_split"})
             # bundled: both GEMMs then one 2x transfer
-            return 2 * t_gemm + 2 * t_send + sync + 2 * KERNEL_LAUNCH
+            return CostBreakdown(segments=(
+                Seg("kv_gemms", 2 * t_gemm, "compute"),
+                Seg("kv_send", 2 * t_send, "wire"),
+                Seg("sync", sync, "sync"),
+                Seg("launch", 2 * KERNEL_LAUNCH, "launch"),
+            ), meta={"path": "xla_host"})
         k = self.kernel_knobs(d)
         if k["fused"]:
             # shuttle FLUX credit: tile c's send hides behind tile c+1's
@@ -213,7 +232,29 @@ class KVTransfer(Workload):
                                      sched.nc)
             fixed = (sched.issued_rounds()
                      + sched.completion_ticks(k["counter"])) * TILE_SYNC
-            return span + exposed + fixed + KERNEL_LAUNCH
+            return CostBreakdown(segments=(
+                Seg("fused_span", span, "overlap",
+                    meta={"compute_s": 2 * t_gemm,
+                          "wire_s": startup + 2 * t_send}),
+                Seg("window_stall", exposed, "stall",
+                    meta={"contexts": k["contexts"]}),
+                Seg("tile_sync", fixed, "sync",
+                    meta={"issued_rounds": sched.issued_rounds(),
+                          "ticks": sched.completion_ticks(k["counter"])}),
+                Seg("launch", KERNEL_LAUNCH, "launch"),
+            ), schedule=sched, knobs=k, meta={"path": "kernel_fused"})
         if k["chained"]:
-            return t_gemm + max(t_send, t_gemm) + t_send + sync + KERNEL_LAUNCH
-        return 2 * t_gemm + 2 * t_send + sync + KERNEL_LAUNCH
+            return CostBreakdown(segments=(
+                Seg("k_gemm", t_gemm, "compute"),
+                Seg("k_send_overlap", max(t_send, t_gemm), "overlap",
+                    meta={"wire_s": t_send, "compute_s": t_gemm}),
+                Seg("v_send", t_send, "wire"),
+                Seg("sync", sync, "sync"),
+                Seg("launch", KERNEL_LAUNCH, "launch"),
+            ), knobs=k, meta={"path": "kernel_chained"})
+        return CostBreakdown(segments=(
+            Seg("kv_gemms", 2 * t_gemm, "compute"),
+            Seg("kv_send", 2 * t_send, "wire"),
+            Seg("sync", sync, "sync"),
+            Seg("launch", KERNEL_LAUNCH, "launch"),
+        ), knobs=k, meta={"path": "kernel_deferred"})

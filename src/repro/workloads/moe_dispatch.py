@@ -56,7 +56,8 @@ from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
                                   register)
 from repro.compat import shard_map
-from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
+from repro.core.cost_model import (CostBreakdown, CostSegment,
+                                   per_tile_exposed_s, window_stall_factor)
 from repro.kernels.moe_dispatch import make_schedule, quant_i8, swiglu_ffn
 
 
@@ -255,6 +256,10 @@ class MoEDispatch(Workload):
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
+        return self.cost_breakdown(d, hw).total
+
+    def cost_breakdown(self, d: Directive, hw) -> CostBreakdown:
+        Seg = CostSegment
         n, T, dm, f = self.n_dev, self.T, self.d, self.f
         counts = self._counts(T)
         C = int(counts.max())
@@ -302,8 +307,13 @@ class MoEDispatch(Workload):
                 sync = BARRIER_OVERHEAD
             else:
                 sync = SIGNAL_OVERHEAD * max(1, n - 1)
-            fixed = t_quant + sync + KERNEL_LAUNCH \
-                + (disp_rounds + ticks) * TILE_SYNC
+            tail = (
+                Seg("quant", t_quant, "quant"),
+                Seg("sync", sync, "sync"),
+                Seg("launch", KERNEL_LAUNCH, "launch"),
+                Seg("tile_sync", (disp_rounds + ticks) * TILE_SYNC, "sync",
+                    meta={"issued_rounds": disp_rounds, "ticks": ticks}),
+            )
             if k["tile_fused"]:
                 # FLUX credit: expert compute starts once the first
                 # microblock lands, and the combine write of tile t hides
@@ -315,8 +325,15 @@ class MoEDispatch(Workload):
                 startup = t_disp / max(1, disp_rounds)
                 span = max(t_disp, startup + t_comp)
                 window = window_stall_factor(k["contexts"])
-                return span + window * per_tile_exposed_s(
-                    sent * dm * 2, hw.chip.ici_link_bw, ticks) + fixed
+                return CostBreakdown(segments=(
+                    Seg("fused_span", span, "overlap",
+                        meta={"wire_s": t_disp,
+                              "compute_s": startup + t_comp}),
+                    Seg("window_stall", window * per_tile_exposed_s(
+                        sent * dm * 2, hw.chip.ici_link_bw, ticks), "stall",
+                        meta={"contexts": k["contexts"]}),
+                ) + tail, schedule=sched, knobs=k,
+                    meta={"path": "kernel_tile_fused"})
             pipelined = (d.placement in ("TILE_PIPELINED", "STREAM_SPLIT")
                          and d.completion != "BARRIER" and d.contexts >= 2)
             if pipelined:
@@ -325,12 +342,38 @@ class MoEDispatch(Workload):
                 # p+1 — only the last peer's chunks stay exposed.
                 peers = max(1, n - 1)
                 span = max(t_disp, t_self + t_remote * (peers - 1) / peers)
-                return span + t_remote / peers + t_comb / peers + fixed
-            return t_disp + t_comp + t_comb + fixed
+                return CostBreakdown(segments=(
+                    Seg("pipeline_span", span, "overlap",
+                        meta={"wire_s": t_disp,
+                              "compute_s": t_self
+                              + t_remote * (peers - 1) / peers}),
+                    Seg("last_peer_compute", t_remote / peers, "compute"),
+                    Seg("last_peer_combine", t_comb / peers, "wire"),
+                ) + tail, schedule=sched, knobs=k,
+                    meta={"path": "kernel_pipelined"})
+            return CostBreakdown(segments=(
+                Seg("dispatch", t_disp, "wire"),
+                Seg("expert_ffn", t_comp, "compute"),
+                Seg("combine", t_comb, "wire"),
+            ) + tail, schedule=sched, knobs=k, meta={"path": "kernel_plain"})
 
         sync = BARRIER_OVERHEAD if d.completion == "BARRIER" else SIGNAL_OVERHEAD
         launches = KERNEL_LAUNCH * 4                  # quant/disp/comp/comb
         if d.placement == "STREAM_SPLIT":
             stage1 = max(t_disp + t_quant, t_self)    # dispatch hidden
-            return stage1 + t_remote + t_comb + sync + launches
-        return t_quant + t_disp + t_comp + t_comb + sync + launches
+            return CostBreakdown(segments=(
+                Seg("dispatch_overlap", stage1, "overlap",
+                    meta={"wire_s": t_disp + t_quant, "compute_s": t_self}),
+                Seg("remote_ffn", t_remote, "compute"),
+                Seg("combine", t_comb, "wire"),
+                Seg("sync", sync, "sync"),
+                Seg("launch", launches, "launch"),
+            ), meta={"path": "xla_stream_split"})
+        return CostBreakdown(segments=(
+            Seg("quant", t_quant, "quant"),
+            Seg("dispatch", t_disp, "wire"),
+            Seg("expert_ffn", t_comp, "compute"),
+            Seg("combine", t_comb, "wire"),
+            Seg("sync", sync, "sync"),
+            Seg("launch", launches, "launch"),
+        ), meta={"path": "xla_host"})

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
+from repro.core.cost_model import (CostBreakdown, CostSegment,
+                                   per_tile_exposed_s, window_stall_factor)
 from repro.core.design_space import Directive
 from repro.core.schedule import make_ring_schedule
 from repro.kernels.ref import flash_attention_ref, ring_attention_ref
@@ -208,6 +209,10 @@ class RingAttention(Workload):
 
     # --------------------------------------------------------- l3 cost model
     def analytic_cost(self, d: Directive, hw) -> float:
+        return self.cost_breakdown(d, hw).total
+
+    def cost_breakdown(self, d: Directive, hw) -> CostBreakdown:
+        Seg = CostSegment
         n, BH, sl, hd = self.n_dev, self.BH, self.sl, self.hd
         flops_round = 4.0 * BH * sl * sl * hd          # qk^T + pv (causal ~1/2
         flops_round *= 0.5 * (1 + 1.0 / n)             # avg causal occupancy)
@@ -218,9 +223,17 @@ class RingAttention(Workload):
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":
                 per_round = max(t_comp, t_wire) + sync
+                kind, path = "overlap", "xla_stream_split"
             else:
                 per_round = t_comp + t_wire + sync + KERNEL_LAUNCH
-            return n * per_round + KERNEL_LAUNCH * n   # per-round host launches
+                kind, path = "compute", "xla_host"
+            return CostBreakdown(segments=(
+                Seg("ring_rounds", n * per_round, kind,
+                    meta={"rounds": n, "per_round_s": per_round,
+                          "compute_s": t_comp, "wire_s": t_wire}),
+                Seg("launch", KERNEL_LAUNCH * n, "launch",
+                    meta={"launches": n}),     # per-round host launches
+            ), meta={"path": path})
         # Pallas device-initiated: no host launches inside the ring
         k = self.kernel_knobs(d)
         if k["fused"]:
@@ -236,10 +249,27 @@ class RingAttention(Workload):
                                      sched.nc)
             fixed = (sched.issued_rounds()
                      + sched.completion_ticks(k["counter"])) * TILE_SYNC
-            return sched.steps * (per_round + exposed) + t_comp + fixed \
-                + KERNEL_LAUNCH
+            return CostBreakdown(segments=(
+                Seg("ring_rounds", sched.steps * per_round, "overlap",
+                    meta={"rounds": sched.steps, "per_round_s": per_round,
+                          "compute_s": t_comp, "wire_s": t_wire}),
+                Seg("window_stall", sched.steps * exposed, "stall",
+                    meta={"contexts": k["contexts"]}),
+                Seg("final_compute", t_comp, "compute"),
+                Seg("tile_sync", fixed, "sync",
+                    meta={"issued_rounds": sched.issued_rounds(),
+                          "ticks": sched.completion_ticks(k["counter"])}),
+                Seg("launch", KERNEL_LAUNCH, "launch"),
+            ), schedule=sched, knobs=k, meta={"path": "kernel_fused"})
         if k["pipelined"] and not k["eager"]:
             per_round = max(t_comp, t_wire) + sync     # lazy fence overlap
+            kind, path = "overlap", "kernel_pipelined"
         else:                                          # DEFERRED / ACQREL
             per_round = t_comp + t_wire + sync
-        return n * per_round + KERNEL_LAUNCH           # one cooperative launch
+            kind, path = "compute", "kernel_deferred"
+        return CostBreakdown(segments=(
+            Seg("ring_rounds", n * per_round, kind,
+                meta={"rounds": n, "per_round_s": per_round,
+                      "compute_s": t_comp, "wire_s": t_wire}),
+            Seg("launch", KERNEL_LAUNCH, "launch"),   # one cooperative launch
+        ), knobs=k, meta={"path": path})

@@ -1,0 +1,145 @@
+"""Observability suite at simulated ranks (default 4): the executable
+acceptance gate of the tracing + telemetry layer (core/trace.py,
+core/telemetry.py).
+
+Covers:
+  * a short single-island slow-path run with full cascade telemetry — one
+    :class:`EvalRecord` per evaluated candidate (success, failure, and the
+    quarantine/error hardening paths), each JSON round-trippable;
+  * the per-generation / per-island / per-mutation series aggregate
+    consistently, and the deterministic ``BENCH_search.json`` artifact is
+    (re)generated at ``--out`` — the checked-in copy must match what this
+    suite produces;
+  * every workload's FLUX point renders a Perfetto-loadable
+    ``schedule_timeline`` whose critical path equals ``analytic_cost``
+    within 1e-6, plus a degraded-membership render (``--trace-dir`` dumps
+    the traces for manual ui.perfetto.dev inspection);
+  * the :class:`ScheduleProbe` observed-vs-modeled check against the real
+    interpret-mode gemm_allgather kernel: the DMA issue/wait order the
+    kernel body actually performs matches the trace-time
+    ``CollectiveSchedule`` the cost model charged.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.core import extract_hardware_context, fast_path, slow_path
+from repro.core.cascade import Candidate, CascadeEvaluator
+from repro.core.design_space import EXPERT_SYSTEMS
+from repro.core.schedule import make_broadcast_schedule
+from repro.core.slow_path import SlowPathConfig
+from repro.core.telemetry import EvalRecord
+from repro.core.trace import ScheduleProbe, schedule_timeline, validate_trace
+from repro.kernels.gemm_allgather import gemm_allgather
+from repro.kernels.ref import gemm_allgather_ref
+from repro.workloads import get_workload
+
+args = argparse.ArgumentParser()
+args.add_argument("--out", default="BENCH_search.json",
+                  help="path for the search-telemetry benchmark artifact")
+args.add_argument("--trace-dir", default=None,
+                  help="directory to dump one Perfetto trace per workload")
+A = args.parse_args()
+
+FLUX = EXPERT_SYSTEMS["FLUX"]
+mesh = make_mesh((4,), ("x",))
+hw = extract_hardware_context(mesh)
+
+# ---- 1-island search with telemetry ---------------------------------------
+# migration needs a second island, so keep migration_every past the horizon
+cfg = SlowPathConfig(islands=1, generations=6, migration_every=7, seed=1)
+w = get_workload("gemm_allgather", n_dev=4, M=4096, K=4096, N=4096)
+seed = fast_path(w, mesh, hw)
+res = slow_path(seed, mesh, hw, cfg)
+tel = res.telemetry
+assert tel is not None and tel.workload == w.name
+assert len(tel.records) == len(res.db.records), (
+    len(tel.records), len(res.db.records))
+for rec in tel.records:                     # every row JSON round-trips
+    assert EvalRecord.from_json(rec.to_json()) == rec
+gens = tel.generation_series()
+assert [g["gen"] for g in gens] == list(range(cfg.generations + 1))
+assert all(g["archive_coverage"] is not None for g in gens)
+assert sum(g["evals"] for g in gens) == len(tel.records)
+ok_records = [r for r in tel.records if r.level >= 3]
+assert ok_records, "the search must land level-3 candidates"
+assert all(r.t_model_ms is not None and "l3" in r.levels_s
+           for r in ok_records)
+isl = tel.island_series()
+assert [i["island"] for i in isl] == [0]
+muts = {m["mutation"]: m for m in tel.mutation_stats()}
+assert "island-seed" in muts and muts["island-seed"]["wins"] >= 1
+assert sum(m["wins"] for m in muts.values()) >= 1
+print(f"search telemetry ok: {len(tel.records)} records over "
+      f"{cfg.generations} generations, best={tel.payload()['totals']['best_score']:.2f}")
+
+# ---- the BENCH_search.json artifact (deterministic, diff-stable) ----------
+meta = {"islands": cfg.islands, "generations": cfg.generations,
+        "seed": cfg.seed, "shape": "n_dev=4 M=4096 K=4096 N=4096"}
+tel.write(A.out, meta=meta)
+payload = json.loads(open(A.out).read())
+assert payload["schema"] == "bench-search/v1"
+assert payload["best"]["score"] == payload["totals"]["best_score"]
+assert "Infinity" not in open(A.out).read()
+print(f"wrote {A.out} ({payload['totals']['evals']} evals, "
+      f"{payload['totals']['ok']} ok)")
+
+# ---- hardened-path records: quarantine + evaluator error carry rows -------
+wedge = get_workload("kv_transfer")
+orig_build = wedge.build
+wedge.build = lambda d, m: (lambda *xs: time.sleep(60.0))
+mesh2 = make_mesh((2,), ("x",), devices=jax.devices()[:2])
+ev = CascadeEvaluator(wedge, mesh2, extract_hardware_context(mesh2),
+                      timeout_s=1.5)
+qres = ev.evaluate(Candidate(directive=FLUX))
+assert qres.quarantined and qres.record is not None
+assert qres.record.quarantined and "quarantine" in qres.record.levels_s
+assert ev.quarantine_report()[0]["record"]["quarantined"] is True
+wedge.build = orig_build
+print("quarantine path carries an EvalRecord "
+      f"(elapsed {qres.record.elapsed_s:.1f}s)")
+
+# ---- per-workload FLUX timelines: Perfetto-valid, critical path == l3 -----
+for name, kw in (("gemm_allgather", {}), ("moe_dispatch", {}),
+                 ("ring_attention", {}), ("kv_transfer", {})):
+    wl = get_workload(name, **kw)
+    tl = schedule_timeline(wl, FLUX, hw)
+    n_ev = validate_trace(tl.to_dict())
+    expect = wl.analytic_cost(FLUX, hw)
+    assert abs(tl.critical_path_s - expect) < 1e-6, (
+        name, tl.critical_path_s, expect)
+    dtl = schedule_timeline(wl, FLUX, hw,
+                            live_ranks=tuple(range(wl.n_dev - 1)))
+    assert dtl.degraded
+    validate_trace(dtl.to_dict())
+    if A.trace_dir:
+        os.makedirs(A.trace_dir, exist_ok=True)
+        tl.write(os.path.join(A.trace_dir, f"timeline_{name}.json"), indent=1)
+    print(f"timeline {name}: {n_ev} events, critical path "
+          f"{tl.critical_path_s*1e3:.3f} ms == analytic_cost")
+
+# ---- observed-vs-modeled: the probe inside the real kernel ----------------
+key = jax.random.PRNGKey(5)
+n, M_l, K, N = 4, 64, 64, 64
+a = jax.random.normal(key, (n, M_l, K), jnp.float32)
+b = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+ref = gemm_allgather_ref(a, b)
+for fused, counter, contexts in ((True, True, 2), (True, False, 1),
+                                 (False, False, 2)):
+    probe = ScheduleProbe()
+    out = gemm_allgather(a, b, mesh, tile_m=32, fused=fused, counter=counter,
+                         contexts=contexts, probe=probe)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3)
+    sched = make_broadcast_schedule(n, M_l, 32, fused)
+    summary = probe.check(sched, contexts, counter=counter)
+    print(f"probe fused={fused} counter={counter} contexts={contexts}: "
+          f"{summary['rounds']} rounds, max depth {summary['max_depth']}, "
+          f"{summary['recv_waits']} recv waits — observed == modeled")
+
+print("ALL OK")

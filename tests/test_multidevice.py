@@ -84,6 +84,25 @@ def test_fault_suite(tmp_path):
         assert entry["degraded_ms"] > entry["healthy_ms"] > 0.0
 
 
+def test_telemetry_suite(tmp_path):
+    """Observability layer end to end: the short telemetry search, one
+    Perfetto timeline per workload (critical path == analytic_cost), the
+    observed-vs-modeled ScheduleProbe check — and the regenerated
+    BENCH_search.json must match the checked-in artifact byte for byte
+    (the search is deterministic; a diff means the search or its
+    telemetry changed and the artifact needs re-checking-in)."""
+    out_json = tmp_path / "BENCH_search.json"
+    out = run_script("telemetry_suite.py", args=["--out", str(out_json)])
+    assert "ALL OK" in out
+    import json
+    regen = json.loads(out_json.read_text())
+    assert regen["schema"] == "bench-search/v1"
+    checked_in = pathlib.Path(__file__).parents[1] / "BENCH_search.json"
+    assert json.loads(checked_in.read_text()) == regen, (
+        "regenerate with: XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+        "PYTHONPATH=src python tests/scripts/telemetry_suite.py")
+
+
 def test_sharded_model_equivalence():
     out = run_script("sharded_model_suite.py", devices=8)
     assert "ALL OK" in out
