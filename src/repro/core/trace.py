@@ -328,6 +328,17 @@ class ScheduleProbe:
         self.events.append(("wait_recv",
                             None if slot is None else int(slot)))
 
+    def mark(self, name):
+        """Freeform ordering marker (e.g. the two-stream serving kernel
+        stamps ``shared_ffn`` between the last dispatch issue and the
+        window drain). Ignored by :meth:`check`; asserted via
+        :attr:`marks` by callers that care about compute/DMA interleave."""
+        self.events.append(("mark", str(name)))
+
+    @property
+    def marks(self):
+        return [e[1] for e in self.events if e[0] == "mark"]
+
     @property
     def issued(self):
         return [(e[1], e[2]) for e in self.events if e[0] == "issue"]

@@ -39,11 +39,12 @@ from repro.core.schedule import (RingSchedule, SendWindow,  # noqa: F401
 def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
                     kbuf, vbuf, ksend, krecv, vsend, vrecv,
                     *, axis, sched: RingSchedule, chained, counter,
-                    contexts, decode_rank):
+                    contexts, decode_rank, pure=False):
     me = jax.lax.axis_index(axis)
     nc, cr = sched.nc, sched.kv_chunk
     dk = kbuf.shape[1]
     chunk_elems = cr * dk
+    rows_total = sched.rows                  # V half's base row (pure mode)
 
     def chunk_dma(buf, o_ref, ssem, rsem_slot, c, nchunks):
         return pltpu.make_async_remote_copy(
@@ -59,8 +60,15 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
     # the schedule contract and the l3 model's window_stall_factor credit.
     window = SendWindow(contexts)
 
-    def gemm_tile(buf, w_ref, c, nchunks):
+    def gemm_tile(buf, w_ref, c, nchunks, base=0):
         rows = nchunks * cr
+        if pure:
+            # pure shuttle: the operand already holds finished K/V rows
+            # (prefill-computed cache blocks) — stage the tile verbatim;
+            # the K half reads rows [0, rows_total), V [rows_total, 2*...)
+            buf.at[pl.ds(c * cr, rows)][...] = \
+                x_ref[pl.ds(base + c * cr, rows)].astype(buf.dtype)
+            return
         buf.at[pl.ds(c * cr, rows)][...] = jax.lax.dot_general(
             x_ref[pl.ds(c * cr, rows)], w_ref[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32).astype(buf.dtype)
@@ -73,7 +81,7 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
                 gemm_tile(kbuf, wk_ref, c, 1)
                 window.push([chunk_dma(kbuf, ko_ref, ksend, krecv.at[c],
                                        c, 1)])
-                gemm_tile(vbuf, wv_ref, c, 1)
+                gemm_tile(vbuf, wv_ref, c, 1, rows_total)
                 window.amend(chunk_dma(vbuf, vo_ref, vsend, vrecv.at[c],
                                        c, 1))
             window.drain()
@@ -86,7 +94,7 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
                                    0, nc)])
             if not chained:
                 window.drain()       # sequential: drain before the V GEMM
-            gemm_tile(vbuf, wv_ref, 0, nc)
+            gemm_tile(vbuf, wv_ref, 0, nc, rows_total)
             if chained:
                 window.amend(chunk_dma(vbuf, vo_ref, vsend, vrecv.at[0],
                                        0, nc))
@@ -128,32 +136,42 @@ def _shuttle_kernel(x_ref, wk_ref, wv_ref, ko_ref, vo_ref,
 def kv_shuttle_sharded(x, wk, wv, *, axis, chained=True, fused=False,
                        counter=False, kv_chunk=None, contexts=2,
                        sched: RingSchedule = None, decode_rank=1,
-                       interpret=None):
+                       interpret=None, pure=False):
     """Per-device fn (under shard_map over a 2-rank axis).
     x: (T, d); wk/wv: (d, dk). Returns (K, V) — valid on the decode rank.
-    An explicit ``sched`` takes precedence over the knob arguments."""
+    An explicit ``sched`` takes precedence over the knob arguments.
+
+    ``pure`` is the cache-handoff mode (no projection GEMMs): x holds the
+    already-computed ``[K; V]`` rows stacked as (2N, w), wk/wv are unused
+    dummies, and the same signal-chained K→V schedule ships the halves —
+    returns (K, V) each (N, w), valid on the decode rank."""
     T, d = x.shape
-    dk = wk.shape[1]
+    if pure:
+        assert T % 2 == 0, "pure shuttle wants stacked [K; V] rows"
+        rows, dk = T // 2, d
+    else:
+        rows, dk = T, wk.shape[1]
     if sched is None:
-        sched = make_ring_schedule(2, T, kv_chunk or (64 if fused else T),
+        sched = make_ring_schedule(2, rows, kv_chunk or (64 if fused else rows),
                                    fused)
-    assert sched.rows == T, (sched, T)
+    assert sched.rows == rows, (sched, rows)
     kern = functools.partial(_shuttle_kernel, axis=axis, sched=sched,
                              chained=chained, counter=counter,
-                             contexts=contexts, decode_rank=decode_rank)
+                             contexts=contexts, decode_rank=decode_rank,
+                             pure=pure)
     ip = interpret if interpret is not None else interpret_params()
     return pl.pallas_call(
         kern,
         in_specs=[
             pl.BlockSpec((T, d), lambda: (0, 0)),
-            pl.BlockSpec((d, dk), lambda: (0, 0)),
-            pl.BlockSpec((d, dk), lambda: (0, 0)),
+            pl.BlockSpec(wk.shape, lambda: (0, 0)),
+            pl.BlockSpec(wv.shape, lambda: (0, 0)),
         ],
         out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
-        out_shape=[jax.ShapeDtypeStruct((T, dk), x.dtype)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((rows, dk), x.dtype)] * 2,
         scratch_shapes=[
-            pltpu.VMEM((T, dk), x.dtype),
-            pltpu.VMEM((T, dk), x.dtype),
+            pltpu.VMEM((rows, dk), x.dtype),
+            pltpu.VMEM((rows, dk), x.dtype),
             pltpu.SemaphoreType.DMA,                 # k send
             pltpu.SemaphoreType.DMA((sched.nc,)),    # k per-chunk recv
             pltpu.SemaphoreType.DMA,                 # v send
@@ -185,3 +203,28 @@ def kv_shuttle(x, wk, wv, mesh, *, axis="x", chained=True, fused=False,
         return ko[None], vo[None]
 
     return run(x, wk, wv)
+
+
+def kv_cache_shuttle(kv, mesh, *, axis="x", chained=True, fused=False,
+                     counter=False, kv_chunk=None, contexts=2):
+    """Global cache-handoff entry (the disaggregated prefill→decode path
+    ``serve/engine.py::prefill_remote`` rides). kv: (2, 2N, w) sharded over
+    the 2-rank ``axis`` — the prefill rank's row holds the finished cache
+    stacked ``[K; V]``, the decode rank's row is zeros. Returns (K, V) each
+    (2, N, w); row [1] (the decode rank) holds the shuttled cache."""
+    from jax.sharding import PartitionSpec as P
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(axis),),
+                       out_specs=(P(axis), P(axis)), check_vma=False)
+    def run(kvs):
+        dummy = jnp.zeros((1, 1), kvs.dtype)
+        ko, vo = kv_shuttle_sharded(kvs[0], dummy, dummy, axis=axis,
+                                    chained=chained, fused=fused,
+                                    counter=counter, kv_chunk=kv_chunk,
+                                    contexts=contexts, pure=True)
+        me = jax.lax.axis_index(axis)
+        ko = jnp.where(me == 1, ko, 0.0)
+        vo = jnp.where(me == 1, vo, 0.0)
+        return ko[None], vo[None]
+
+    return run(kv)

@@ -93,13 +93,24 @@ def swiglu_ffn(x, w1, w2):
     return (jax.nn.silu(g) * u) @ w2
 
 
-def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
-                xbuf, w1buf, w2buf,
-                send_q, send_s, recv_q, recv_s, ffn_out, comb,
-                dsend, drecv, qsend, qrecv, csend, crecv,
-                *, axis, sched: DispatchSchedule, offsets, pipelined,
+def _moe_kernel(*refs, axis, sched: DispatchSchedule, offsets, pipelined,
                 barrier, contexts, wire_i8, tile_fused=False,
-                combine_tile=None, elide_dummy=False):
+                combine_tile=None, elide_dummy=False, shared=False,
+                probe=None):
+    if shared:
+        # two-stream serving layout: the shared-expert operands (xs, s1,
+        # s2) and output ys ride along, and the shared FFN is issued
+        # against the open dispatch send window (see run_rounds)
+        (x_ref, w1_ref, w2_ref, xs_ref, s1_ref, s2_ref, y_ref, ys_ref,
+         xbuf, w1buf, w2buf, xsbuf, s1buf, s2buf,
+         send_q, send_s, recv_q, recv_s, ffn_out, comb,
+         dsend, drecv, qsend, qrecv, csend, crecv) = refs
+    else:
+        (x_ref, w1_ref, w2_ref, y_ref,
+         xbuf, w1buf, w2buf,
+         send_q, send_s, recv_q, recv_s, ffn_out, comb,
+         dsend, drecv, qsend, qrecv, csend, crecv) = refs
+        xsbuf = s1buf = s2buf = ys_ref = None
     n, B = sched.n, sched.block_tokens
     b_max, blocks, counts = sched.b_max, sched.blocks, sched.counts
     stride = b_max * B                       # slab rows per edge region
@@ -113,6 +124,10 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
     sync_copy(x_ref, xbuf)
     sync_copy(w1_ref, w1buf)
     sync_copy(w2_ref, w2buf)
+    if shared:
+        sync_copy(xs_ref, xsbuf)
+        sync_copy(s1_ref, s1buf)
+        sync_copy(s2_ref, s2buf)
     def _lookup(table, idx):
         # static-table lookup by traced index without capturing a constant
         # array (the legacy pallas tracer rejects non-scalar kernel consts)
@@ -210,13 +225,33 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
         return SendWindow(contexts, start=lambda e: _start(*e),
                           wait=_wait_sent)
 
-    def run_rounds(round_fn):
-        """Issue all rounds with a bounded in-flight send window."""
+    def run_rounds(round_fn, between=None, tag=None):
+        """Issue all rounds with a bounded in-flight send window.
+        ``between`` runs after the last round is pushed but *before* the
+        window drains — compute issued against in-flight sends (the
+        two-stream overlap slot). ``tag`` stamps probe marks around it."""
         window = make_window()
         for off in range(n):
             for j in range(b_max):
                 window.push(round_fn(off, j))
+        if probe is not None and tag:
+            probe.mark(f"{tag}_issued")
+        if between is not None:
+            between()
         window.drain()
+        if probe is not None and tag:
+            probe.mark(f"{tag}_drained")
+
+    def shared_compute():
+        """The second stream: the replicated shared-expert FFN over the
+        local tokens, issued while dispatch DMAs are still in flight (the
+        TokenWeave overlap — communication hidden behind compute the
+        serving step has to do anyway)."""
+        if probe is not None:
+            probe.mark("shared_ffn")
+        ys = swiglu_ffn(xsbuf[...].astype(jnp.float32),
+                        s1buf[...], s2buf[...])
+        ys_ref.at[pl.ds(0, xsbuf.shape[0])][...] = ys.astype(ys_ref.dtype)
 
     blk_elems = B * d_model                            # recv-sem units/block
     scl_elems = B                                      # scale-sem units/block
@@ -242,7 +277,10 @@ def _moe_kernel(x_ref, w1_ref, w2_ref, y_ref,
     my_blocks = _lookup(blocks, me)
 
     # ---- dispatch ------------------------------------------------------
-    run_rounds(dispatch_round)
+    # (with `shared`, the shared-expert stream runs against the open
+    # dispatch send window — before the drain, after the last issue)
+    run_rounds(dispatch_round, between=shared_compute if shared else None,
+               tag="dispatch")
 
     if tile_fused:
         # TILE_FUSED + COUNTER (the FLUX point): the expert FFN runs as a
@@ -323,10 +361,16 @@ def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
                                  pipelined=True, barrier=False, contexts=2,
                                  wire_i8=False, tile_fused=False,
                                  combine_tile=None, elide_dummy=None,
-                                 interpret=None):
+                                 interpret=None, shared=None, probe=None):
     """Per-device fn (under shard_map). x: (T, d) local tokens sorted into
     contiguous per-expert blocks by ``sched.counts``; w1: (d, 2f); w2:
-    (f, d) — this rank's expert. Returns (T, d) combined outputs."""
+    (f, d) — this rank's expert. Returns (T, d) combined outputs.
+
+    ``shared=(xs, s1, s2)`` enables the two-stream serving path: xs (Ts, d)
+    local tokens, s1 (d, 2fs) / s2 (fs, d) the replicated shared-expert
+    weights. The shared FFN is issued inside the kernel against the open
+    dispatch send window and the call returns ``(y, ys)``. ``probe`` (a
+    :class:`~repro.core.trace.ScheduleProbe`) records interleave marks."""
     T, d = x.shape
     n, B, b_max = sched.n, sched.block_tokens, sched.b_max
     assert sum(sched.counts) == T, (sched.counts, T)
@@ -348,16 +392,32 @@ def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
         pipelined=pipelined, barrier=barrier, contexts=contexts,
         wire_i8=wire_i8, tile_fused=tile_fused,
         combine_tile=sanitize_combine_tile(combine_tile, B),
-        elide_dummy=elide_dummy)
+        elide_dummy=elide_dummy, shared=shared is not None, probe=probe)
+    inputs = (x, w1, w2)
+    out_shape = jax.ShapeDtypeStruct((T, d), x.dtype)
+    out_specs = pl.BlockSpec(memory_space=pl.ANY)
+    stage_scratch = [
+        pltpu.VMEM((T, d), x.dtype),                    # staged x operand
+        pltpu.VMEM(w1.shape, w1.dtype),                 # staged w1 operand
+        pltpu.VMEM(w2.shape, w2.dtype),                 # staged w2 operand
+    ]
+    if shared is not None:
+        xs, s1, s2 = shared
+        inputs = (x, w1, w2, xs, s1, s2)
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct(xs.shape, x.dtype))
+        out_specs = (out_specs, pl.BlockSpec(memory_space=pl.ANY))
+        stage_scratch += [
+            pltpu.VMEM(xs.shape, xs.dtype),             # staged shared x
+            pltpu.VMEM(s1.shape, s1.dtype),             # staged shared w1
+            pltpu.VMEM(s2.shape, s2.dtype),             # staged shared w2
+        ]
     return pl.pallas_call(
         kern,
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((T, d), x.dtype),                # staged x operand
-            pltpu.VMEM(w1.shape, w1.dtype),             # staged w1 operand
-            pltpu.VMEM(w2.shape, w2.dtype),             # staged w2 operand
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(inputs),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=stage_scratch + [
             pltpu.VMEM((n * stride, d), wire_dt),       # send slab
             pltpu.VMEM((n * stride, 1), jnp.float32),   # send scales
             pltpu.VMEM((slab, d), wire_dt),             # recv slab (+trash)
@@ -373,31 +433,56 @@ def moe_dispatch_combine_sharded(x, w1, w2, *, axis, sched: DispatchSchedule,
         ],
         interpret=ip,
         compiler_params=tpu_compiler_params(collective_id=17),
-    )(x, w1, w2)
+    )(*inputs)
 
 
 def moe_dispatch_combine(x, w1, w2, mesh, *, axis="x", counts,
                          block_tokens=64, tight=True, pipelined=True,
                          barrier=False, contexts=2, wire_i8=False,
                          tile_fused=False, combine_tile=None,
-                         elide_dummy=None):
+                         elide_dummy=None, shared=None, probe=None):
     """Global entry. x: (n, T, d) token-sharded over ``axis`` (each rank's
     rows sorted into contiguous per-expert blocks, identical static
     ``counts`` on every rank); w1: (n, d, 2f), w2: (n, f, d) — expert e's
     weights on rank e. Returns (n, T, d): each rank's tokens after
-    dispatch -> expert FFN -> combine."""
+    dispatch -> expert FFN -> combine.
+
+    ``shared=(xs, s1, s2)`` — xs (n, Ts, d) token-sharded, s1 (d, 2fs) /
+    s2 (fs, d) replicated shared-expert weights — returns ``(y, ys)``
+    with ys (n, Ts, d) the shared-expert stream computed inside the
+    kernel against the dispatch send window (the TokenWeave two-stream
+    serving point)."""
     from jax.sharding import PartitionSpec as P
     sched = make_schedule(counts, block_tokens, tight)
 
-    @functools.partial(shard_map, mesh=mesh,
-                       in_specs=(P(axis), P(axis), P(axis)),
-                       out_specs=P(axis), check_vma=False)
-    def run(xs, w1s, w2s):
-        out = moe_dispatch_combine_sharded(
-            xs[0], w1s[0], w2s[0], axis=axis, sched=sched,
+    if shared is None:
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(P(axis), P(axis), P(axis)),
+                           out_specs=P(axis), check_vma=False)
+        def run(xs_, w1s, w2s):
+            out = moe_dispatch_combine_sharded(
+                xs_[0], w1s[0], w2s[0], axis=axis, sched=sched,
+                pipelined=pipelined, barrier=barrier, contexts=contexts,
+                wire_i8=wire_i8, tile_fused=tile_fused,
+                combine_tile=combine_tile, elide_dummy=elide_dummy,
+                probe=probe)
+            return out[None]
+
+        return run(x, w1, w2)
+
+    xs, s1, s2 = shared
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P()),
+        out_specs=(P(axis), P(axis)), check_vma=False)
+    def run2(xs_, w1s, w2s, xss, s1r, s2r):
+        y, ys = moe_dispatch_combine_sharded(
+            xs_[0], w1s[0], w2s[0], axis=axis, sched=sched,
             pipelined=pipelined, barrier=barrier, contexts=contexts,
             wire_i8=wire_i8, tile_fused=tile_fused,
-            combine_tile=combine_tile, elide_dummy=elide_dummy)
-        return out[None]
+            combine_tile=combine_tile, elide_dummy=elide_dummy,
+            shared=(xss[0], s1r, s2r), probe=probe)
+        return y[None], ys[None]
 
-    return run(x, w1, w2)
+    return run2(x, w1, w2, xs, s1, s2)

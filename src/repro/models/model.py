@@ -35,6 +35,7 @@ class StepOptions:
     remat: bool = True
     moe_overlap: bool = False        # CUCo self/remote split dispatch hiding
     moe_quantize: bool = False       # int8 dispatch (paper's quantize phase)
+    moe_backend: str = "xla"         # "pallas": fused dispatch kernel (FLUX)
     kv_block: int = 1024             # lax-flash KV block
     flash_threshold: int = 8192
     scan_layers: bool = True

@@ -234,6 +234,79 @@ def _alltoall_body(x, router, wg, wu, wd, shared, *, cfg, dp_axes, tp_axes,
     return y.reshape(B, S, d)
 
 
+def _pallas_body(x, router, wg, wu, wd, shared, *, cfg, dp_axis, overlap,
+                 quantize, interpret, probe):
+    """The PALLAS_RDMA branch (the serving hot path): routing/capacity
+    layout identical to ``_alltoall_body`` up to the dst-major capacity
+    buffer, but dispatch → expert FFN → combine runs as ONE fused
+    device-initiated kernel (``kernels/moe_dispatch``, FLUX knobs:
+    tile_fused + COUNTER). With ``overlap`` and a shared expert, the
+    shared-expert FFN is the kernel's second stream — issued against the
+    open dispatch send window (the TokenWeave two-stream overlap,
+    executably). Eligibility is gated by :func:`pallas_moe_eligible`;
+    the capacity-slot layout makes the kernel's output slab bit-match
+    the XLA path's ``y_slots``, so combine/gather code is shared."""
+    from repro.core.schedule import make_schedule
+    from repro.kernels.moe_dispatch import moe_dispatch_combine_sharded
+    B, S, d = x.shape
+    T = B * S
+    x2 = x.reshape(T, d)
+    k, E_pad = cfg.experts_per_token, cfg.num_experts_padded
+    ep = axis_size(dp_axis)
+    C = _capacity(T, k, cfg.num_experts, cfg.capacity_factor)
+    gates, idx = _route(x2, router, cfg)
+    flat_e, pos, keep = _dispatch_indices(idx, E_pad, C)
+    tok = jnp.arange(T * k) // k
+    slot = jnp.where(keep, flat_e * C + pos, E_pad * C)
+    buf = jnp.zeros((E_pad * C + 1, d), x.dtype).at[slot].add(
+        x2[tok] * keep[:, None].astype(x.dtype))
+    # (ep*C, d): contiguous per-expert capacity blocks — exactly the
+    # sorted-block layout the dispatch kernel's static counts contract
+    # wants (uniform counts == C, so the schedule has no dummy blocks)
+    xk = buf[:-1]
+    w1 = jnp.concatenate([wg[0], wu[0]], axis=-1)        # (d, 2f) swiglu
+    w2 = wd[0]                                           # (f, d)
+    sched = make_schedule([C] * ep, block_tokens=min(64, C), tight=True)
+    shared_op = None
+    if overlap and shared is not None:
+        s1 = jnp.concatenate([shared["gate"], shared["up"]], axis=-1)
+        shared_op = (x2.astype(F32), s1.astype(F32),
+                     shared["down"].astype(F32))
+    out = moe_dispatch_combine_sharded(
+        xk.astype(F32), w1.astype(F32), w2.astype(F32), axis=dp_axis,
+        sched=sched, tile_fused=True, pipelined=True, barrier=False,
+        contexts=2, wire_i8=quantize, shared=shared_op,
+        interpret=interpret, probe=probe)
+    y_slots, ys = out if shared_op is not None else (out, None)
+    contrib = y_slots.astype(x.dtype)[jnp.minimum(slot, E_pad * C - 1)]
+    contrib = contrib * (gates.reshape(-1, 1) * keep[:, None]).astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+    if shared is not None:
+        if ys is not None:
+            y = y + ys.astype(x.dtype)                   # second stream
+        else:
+            from repro.models.layers import mlp_apply
+            y = y + mlp_apply(shared, x2, "swiglu")
+    return y.reshape(B, S, d)
+
+
+def pallas_moe_eligible(cfg, rules, B):
+    """Can this (config, sharding, batch) route through the fused
+    dispatch kernel? Requirements mirror the kernel contract: alltoall
+    EP over exactly one data axis (the kernel's named-axis mesh), no ff
+    TP (expert weights whole per rank), batch shardable, and exactly one
+    expert per rank (``E_pad == ep`` — the DeepSeek-V3-style serving
+    deployment). Ineligible shapes silently take the XLA paths."""
+    if rules is None or rules.mesh is None or cfg.ep_mode != "alltoall":
+        return False
+    dp = rules.dp_size()
+    if not (dp and B % dp == 0 and B >= dp):
+        return False
+    if len(rules.dp_axes) != 1 or rules.tp_axes:
+        return False
+    return cfg.num_experts_padded == dp
+
+
 def _gathered_body(x, router, wg, wu, wd, shared, *, cfg, dp_axes, tp_axes):
     """Decode path when batch is too small to shard (e.g. long_500k, B=1):
     tokens replicated over DP; experts sharded over DP; ff over TP; psum-all.
@@ -272,8 +345,15 @@ def _gathered_body(x, router, wg, wu, wd, shared, *, cfg, dp_axes, tp_axes):
 
 # ---------------------------------------------------------------- public API
 
-def moe_apply(params, x, cfg, rules, *, overlap=False, quantize=False):
-    """Apply the MoE block. x: (B, S, d) global."""
+def moe_apply(params, x, cfg, rules, *, overlap=False, quantize=False,
+              backend="xla", interpret=None, probe=None):
+    """Apply the MoE block. x: (B, S, d) global.
+
+    ``backend="pallas"`` routes the dispatch→FFN→combine chain through the
+    fused ``kernels/moe_dispatch`` kernel (FLUX point) when
+    :func:`pallas_moe_eligible` holds — with ``overlap`` the shared-expert
+    FFN becomes the kernel's second stream (the TokenWeave point). The
+    kernel's ``interpret``/``probe`` plumb through for tests."""
     if rules is None or rules.mesh is None:
         return _local_moe(x, params, cfg)
 
@@ -288,7 +368,13 @@ def moe_apply(params, x, cfg, rules, *, overlap=False, quantize=False):
     b_ok = dp and B % dp == 0 and B >= dp
     x_spec = P(rules.axes("batch") if b_ok else None, None, None)
 
-    if cfg.ep_mode == "alltoall" and b_ok:
+    if backend == "pallas" and pallas_moe_eligible(cfg, rules, B):
+        body = partial(_pallas_body, cfg=cfg, dp_axis=dp_axes[0],
+                       overlap=overlap, quantize=quantize,
+                       interpret=interpret, probe=probe)
+        in_specs = (x_spec, pspecs["router"], pspecs["wg"], pspecs["wu"],
+                    pspecs["wd"], shared_spec)
+    elif cfg.ep_mode == "alltoall" and b_ok:
         body = partial(_alltoall_body, cfg=cfg, dp_axes=dp_axes, tp_axes=tp_axes,
                        overlap=overlap, quantize=quantize)
         in_specs = (x_spec, pspecs["router"], pspecs["wg"], pspecs["wu"],

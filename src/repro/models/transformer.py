@@ -123,7 +123,8 @@ def attn_block_apply(p, x, cfg, kind, rules, positions, *, causal=True,
     if "moe" in p:
         y = moe_apply(p["moe"], xn3, cfg, rules,
                       overlap=(opts.moe_overlap if opts else False),
-                      quantize=(opts.moe_quantize if opts else False))
+                      quantize=(opts.moe_quantize if opts else False),
+                      backend=(opts.moe_backend if opts else "xla"))
     else:
         y = mlp_apply(p["mlp"], xn3, cfg.act)
     x = x + y

@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeConfig, Engine
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["ServeConfig", "Engine", "Request", "Scheduler"]

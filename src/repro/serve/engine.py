@@ -34,6 +34,51 @@ from repro.core.telemetry import MetricsRegistry
 from repro.models import StepOptions, decode_step, prefill_step
 
 
+def _leaf_name(path):
+    return getattr(path[-1], "key", None)
+
+
+def _stack_caches(caches):
+    """Batch per-request (B=1) decode caches into one engine cache.
+
+    Attention leaves (k/v/ck/cv) carry batch on axis 1; kpos is shared
+    across the batch (all grouped requests sit at the same position), so
+    any one copy is the group's. Recurrent state leaves are not batched
+    here — grouped decode serves attention archs."""
+    if len(caches) == 1:
+        return caches[0]
+
+    def cat(path, *xs):
+        name = _leaf_name(path)
+        if name in ("k", "v", "ck", "cv"):
+            return jnp.concatenate(xs, axis=1)
+        if name == "kpos":
+            return xs[0]
+        raise NotImplementedError(
+            f"serve: cannot batch cache leaf {name!r} (recurrent state?)")
+
+    return jax.tree_util.tree_map_with_path(cat, caches[0], *caches[1:])
+
+
+def _split_cache(cache, n):
+    """Inverse of :func:`_stack_caches`: n per-request (B=1) caches."""
+    if n == 1:
+        return [cache]
+
+    def cut(i):
+        def f(path, x):
+            name = _leaf_name(path)
+            if name in ("k", "v", "ck", "cv"):
+                return x[:, i:i + 1]
+            if name == "kpos":
+                return x
+            raise NotImplementedError(
+                f"serve: cannot split cache leaf {name!r}")
+        return jax.tree_util.tree_map_with_path(f, cache)
+
+    return [cut(i) for i in range(n)]
+
+
 @dataclass
 class ServeConfig:
     max_seq: int = 512
@@ -56,13 +101,39 @@ class Engine:
         self.watchdog = watchdog          # optional StragglerWatchdog
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+        self._gen = 0                     # bumped by degrade()
+        self._jit_steps()
+
+    def _jit_steps(self):
+        cfg, rules, scfg = self.cfg, self.rules, self.scfg
         self._prefill = jax.jit(
             lambda p, b: prefill_step(p, b, cfg, rules,
-                                      seq_len=serve_cfg.max_seq,
-                                      opts=serve_cfg.opts))
+                                      seq_len=scfg.max_seq, opts=scfg.opts))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, rules,
-                                             opts=serve_cfg.opts))
+                                             opts=scfg.opts))
+
+    def degrade(self, devices):
+        """Elastic serving: shrink onto the surviving devices and re-jit.
+
+        Rebuilds a 1-D data mesh + :class:`Rules` of the same kind over
+        ``devices`` (the serving deployment shape); a single survivor drops
+        the engine to the local (unsharded) path. Per-request caches held
+        by a running ``serve`` loop are replicated-small and re-placed by
+        the next jitted step, so the loop keeps emitting tokens."""
+        from repro.compat import make_mesh
+        from repro.dist.sharding import Rules
+        devices = list(devices)
+        if self.rules is None or len(devices) <= 1:
+            self.rules = None
+        else:
+            mesh = make_mesh((len(devices),), ("data",), devices=devices)
+            self.rules = Rules(mesh, self.rules.kind,
+                               long_context=self.rules.long_context)
+        self.metrics.counter("serve.degrades").inc()
+        self._gen += 1
+        self._jit_steps()
+        return self.rules
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
@@ -114,12 +185,122 @@ class Engine:
             out.append(tok)
         return jnp.stack(out, axis=1)
 
+    # ---- continuous batching --------------------------------------------
+    def _req_key(self, rid):
+        # per-request stream: independent of batch composition and of the
+        # engine-level stream used by generate()
+        return jax.random.fold_in(jax.random.PRNGKey(self.scfg.seed), rid)
+
+    def serve(self, scheduler, on_step=None, max_steps=10_000):
+        """Continuous-batching loop over a :class:`repro.serve.scheduler.
+        Scheduler`: each step decodes the scheduler's claims (grouped by
+        position so one jitted ``decode_step`` serves each group) and
+        prefills its admissions. Sampling uses per-request key streams
+        (``fold_in(seed, rid)``), so a request's tokens do not depend on
+        which other requests share its batch. ``on_step(step_no, engine)``
+        runs after every step — the fault-injection hook for elastic
+        serving tests. Returns ``{rid: (tokens,) int32}``."""
+        states, done = {}, {}
+        step_no = 0
+        while scheduler.pending:
+            if step_no >= max_steps:
+                raise RuntimeError(
+                    f"serve: {max_steps} steps with requests still pending")
+            decode_rids, admits = scheduler.plan_step()
+
+            groups = {}
+            for rid in decode_rids:
+                groups.setdefault(states[rid]["pos"], []).append(rid)
+            for pos, rids in sorted(groups.items()):
+                toks = jnp.concatenate([states[r]["tok"] for r in rids])
+                cache = _stack_caches([states[r]["cache"] for r in rids])
+                t0 = time.perf_counter()
+                logits, cache = self._decode(self.params, cache,
+                                             toks[:, None], jnp.int32(pos))
+                jax.block_until_ready(logits)
+                step_s = time.perf_counter() - t0
+                if self.watchdog is not None and self.watchdog.record(step_s):
+                    self.metrics.counter("serve.watchdog_incidents").inc()
+                self.metrics.histogram("serve.decode_step_ms").observe(
+                    step_s * 1e3)
+                self.metrics.counter("serve.decode_steps").inc()
+                self.metrics.counter("serve.tokens_generated").inc(len(rids))
+                parts = _split_cache(cache, len(rids))
+                for i, rid in enumerate(rids):
+                    st = states[rid]
+                    st["key"], sub = jax.random.split(st["key"])
+                    tok = self._sample(logits[i:i + 1], sub)
+                    st.update(tok=tok, cache=parts[i], pos=pos + 1)
+                    st["out"].append(int(tok[0]))
+
+            for req in admits:
+                batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+                logits, cache = self._prefill(self.params, batch)
+                key, sub = jax.random.split(self._req_key(req.rid))
+                tok = self._sample(logits, sub)
+                states[req.rid] = {"cache": cache, "pos": req.prompt_len,
+                                   "tok": tok, "key": key,
+                                   "out": [int(tok[0])]}
+                self.metrics.counter("serve.prefills").inc()
+                self.metrics.counter("serve.prefill_tokens").inc(
+                    req.prompt_len)
+
+            for rid in list(states):
+                if len(states[rid]["out"]) >= \
+                        scheduler.active[rid].max_new_tokens:
+                    done[rid] = jnp.asarray(states.pop(rid)["out"],
+                                            jnp.int32)
+                    scheduler.finish(rid)
+
+            self.metrics.counter("serve.steps").inc()
+            if on_step is not None:
+                gen = self._gen
+                on_step(step_no, self)
+                if self._gen != gen:
+                    # degraded mid-run: pull request state off the old mesh
+                    # so the re-jitted steps re-place it on the new one
+                    for st in states.values():
+                        st["cache"] = jax.device_get(st["cache"])
+                        st["tok"] = jax.device_get(st["tok"])
+            step_no += 1
+        return done
+
     # ---- disaggregated prefill/decode tiers ------------------------------
-    def prefill_remote(self, batch):
+    def _shuttle_cache(self, cache, mesh, **kw):
+        """Push every attention KV block through the device-initiated
+        ``kv_cache_shuttle`` kernel (prefill rank 0 → decode rank 1 of
+        ``mesh``) and return the cache rebuilt from what landed on the
+        decode rank. Paired leaves ([k,v] and [ck,cv]) ride one shuttle
+        each as stacked ``[K; V]`` row blocks."""
+        from repro.kernels.kv_shuttle import kv_cache_shuttle
+        out = {}
+        for name, block in cache.items():
+            if not (isinstance(block, dict) and "k" in block):
+                raise NotImplementedError(
+                    f"serve: cannot shuttle cache block {name!r}")
+            nb = dict(block)
+            for a, b in (("k", "v"), ("ck", "cv")):
+                if a not in block:
+                    continue
+                ka, vb = block[a], block[b]
+                rows = lambda x: x.reshape(-1, x.shape[-1])
+                stacked = jnp.concatenate([rows(ka), rows(vb)], axis=0)
+                kv = jnp.stack([stacked, jnp.zeros_like(stacked)])
+                ko, vo = kv_cache_shuttle(kv, mesh, **kw)
+                nb[a] = ko[1].reshape(ka.shape).astype(ka.dtype)
+                nb[b] = vo[1].reshape(vb.shape).astype(vb.dtype)
+            out[name] = nb
+        return out
+
+    def prefill_remote(self, batch, shuttle_mesh=None, **shuttle_kw):
         """Prefill-tier step: returns the cache pytree to ship to decode.
-        On hardware the KV blocks ride the device-initiated kv_shuttle
-        (repro.kernels.kv_shuttle); the engine hands over the pytree."""
+        With ``shuttle_mesh`` (a 2-rank mesh) the KV blocks actually ride
+        the device-initiated kv_shuttle kernel — prefill rank pushes, the
+        handoff cache is what lands on the decode rank; without it the
+        engine hands over the pytree directly."""
         tok, cache, pos = self.prefill(batch)
+        if shuttle_mesh is not None:
+            cache = self._shuttle_cache(cache, shuttle_mesh, **shuttle_kw)
         self.metrics.counter("serve.kv_handoffs").inc()
         return {"first_token": tok, "cache": cache, "pos": pos}
 

@@ -1,5 +1,5 @@
 from repro.workloads.base import Workload, WORKLOADS, get_workload
 from repro.workloads import ring_attention, moe_dispatch, kv_transfer, \
-    gemm_allgather  # noqa: F401  (registration side effects)
+    gemm_allgather, serving  # noqa: F401  (registration side effects)
 
 __all__ = ["Workload", "WORKLOADS", "get_workload"]

@@ -81,6 +81,28 @@ def test_sampling_keys_advance_between_batches():
     handoff = eng3.prefill_remote(batch)
     c = np.asarray(eng3.decode_from_handoff(handoff, 8))
     assert np.array_equal(a, c)
+    # the continuous-batching serve path draws from per-request fold_in
+    # streams instead: a request's samples survive batch reassembly (the
+    # scheduler regrouping rows across steps must not perturb any stream),
+    # and serving does not consume the engine-level generate() stream
+    from repro.serve import Request, Scheduler
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (3, 4))
+
+    def serve(max_batch, rids):
+        eng = Engine(cfg, params, ServeConfig(max_seq=64, temperature=1.0,
+                                              seed=7))
+        s = Scheduler(token_budget=12, max_batch=max_batch)
+        for r in rids:
+            s.submit(Request(r, tuple(int(t) for t in prompts[r]),
+                             max_new_tokens=4 + r))
+        return eng.serve(s), eng
+
+    together, eng4 = serve(3, [0, 1, 2])
+    alone, _ = serve(1, [1])
+    assert np.array_equal(together[1], alone[1])
+    assert not np.array_equal(together[0][:4], together[1][:4])
+    # generate() after serve() replays the untouched engine stream
+    assert np.array_equal(a, np.asarray(eng4.generate(batch, 8)))
 
 
 def test_cuco_discovers_codesign():
