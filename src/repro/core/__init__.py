@@ -9,7 +9,8 @@ meta-summarizer, and the v5e roofline cost model.
 from repro.core.design_space import (Directive, CONSERVATIVE, DIMENSIONS,
                                      EXPERT_SYSTEMS, TUNABLES, violations,
                                      is_valid, random_directive,
-                                     enumerate_valid)
+                                     enumerate_valid, directive_key,
+                                     directive_from_dict)
 from repro.core.hardware import V5E, ChipSpec, HardwareContext, \
     extract_hardware_context
 from repro.core.cost_model import (CostBreakdown, CostSegment,
@@ -30,17 +31,19 @@ from repro.core.faults import (FaultPlan, FaultSpec, fault_cost,
                                inject_wire_fault, survival_report)
 from repro.core.comm_graph import analyze as analyze_comm_graph
 from repro.core.cascade import Candidate, CascadeEvaluator, EvalResult
-from repro.core.database import CandidateDB, embed_code
+from repro.core.database import CandidateDB, StoreError, embed_code
 from repro.core.archive import MapElitesArchive
 from repro.core.mutation import (HeuristicMutator, LLMMutator,
                                  MutationContext, parse_directive)
 from repro.core.meta import MetaSummarizer
 from repro.core.fast_path import fast_path, VerifiedSeed, DEVICE_CONSERVATIVE
-from repro.core.slow_path import (SlowPathConfig, SearchResult, slow_path)
+from repro.core.slow_path import (SlowPathConfig, SearchResult, slow_path,
+                                  transfer_seeds)
 
 __all__ = [
     "Directive", "CONSERVATIVE", "DIMENSIONS", "EXPERT_SYSTEMS", "TUNABLES",
     "violations", "is_valid", "random_directive", "enumerate_valid",
+    "directive_key", "directive_from_dict",
     "V5E", "ChipSpec", "HardwareContext", "extract_hardware_context",
     "RooflineReport", "parse_collectives", "per_tile_exposed_s",
     "roofline_from_compiled", "window_stall_factor",
@@ -55,8 +58,9 @@ __all__ = [
     "FaultPlan", "FaultSpec", "fault_cost", "inject_wire_fault",
     "survival_report",
     "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",
-    "CandidateDB", "embed_code", "MapElitesArchive", "HeuristicMutator",
+    "CandidateDB", "StoreError", "embed_code", "MapElitesArchive",
+    "HeuristicMutator",
     "LLMMutator", "MutationContext", "parse_directive", "MetaSummarizer",
     "fast_path", "VerifiedSeed", "DEVICE_CONSERVATIVE", "SlowPathConfig",
-    "SearchResult", "slow_path",
+    "SearchResult", "slow_path", "transfer_seeds",
 ]

@@ -3,10 +3,21 @@
 Grid indexed by the behavioral descriptor derived from the optimization
 directive (backend, placement, completion); each cell keeps the
 highest-scoring candidate with that behavioral profile. Archive samples are
-injected into mutation prompts as cross-pollination inspirations."""
+injected into mutation prompts as cross-pollination inspirations.
+
+The archive also persists (docs/search.md): :meth:`MapElitesArchive.save`
+writes each cell's behavior key, elite candidate (directive + deterministic
+result fields) and code embedding as versioned JSON;
+:meth:`MapElitesArchive.load` rebuilds it, raising
+``database.StoreError`` on corruption or a version this code does not
+read. ``slow_path(..., warm_start=...)`` accepts either store kind."""
 from __future__ import annotations
 
+import json
 import random
+
+ARCHIVE_SCHEMA = "cuco-map-elites"
+ARCHIVE_VERSION = 1
 
 
 class MapElitesArchive:
@@ -32,3 +43,49 @@ class MapElitesArchive:
 
     def coverage(self):
         return len(self.cells)
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path, *, workload="", hardware=""):
+        """Versioned JSON of every cell: behavior key, elite candidate, and
+        its code embedding, stamped with the fingerprints the elites were
+        scored under (cells sorted by behavior for a deterministic file)."""
+        from repro.core.database import candidate_to_dict, embed_code
+        cells = []
+        for behavior in sorted(self.cells):
+            cand = self.cells[behavior]
+            emb = embed_code(cand.code_text or cand.directive.render())
+            cells.append({"behavior": list(behavior),
+                          "candidate": candidate_to_dict(cand),
+                          "embedding": [round(float(x), 7) for x in emb]})
+        payload = {"schema": ARCHIVE_SCHEMA, "version": ARCHIVE_VERSION,
+                   "workload": str(workload), "hardware": str(hardware),
+                   "cells": cells}
+        with open(path, "w") as f:
+            json.dump(payload, f, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path) -> "MapElitesArchive":
+        """Rebuild an archive from :meth:`save` output; fingerprints land on
+        ``archive.saved_meta``. Raises ``database.StoreError`` on corruption
+        or version mismatch."""
+        from repro.core.database import StoreError, candidate_from_dict, \
+            load_store
+        payload = load_store(path, ARCHIVE_SCHEMA, ARCHIVE_VERSION)
+        arch = cls()
+        try:
+            for cell in payload["cells"]:
+                cand = candidate_from_dict(cell["candidate"])
+                behavior = tuple(cell["behavior"])
+                if behavior != cand.directive.behavior:
+                    raise StoreError(
+                        f"{path}: cell behavior {behavior} does not match "
+                        f"its elite's directive {cand.directive.behavior}")
+                arch.cells[behavior] = cand
+        except StoreError:
+            raise
+        except (KeyError, TypeError, ValueError) as e:
+            raise StoreError(f"{path}: malformed archive cell: {e}") from e
+        arch.saved_meta = {"workload": payload.get("workload", ""),
+                           "hardware": payload.get("hardware", "")}
+        return arch

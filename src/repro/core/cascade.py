@@ -21,12 +21,28 @@ with nobody watching):
   ``EvalResult.fault_report``; ``fault_weight`` folds the mean degraded-ms
   penalty into the score so the search optimizes a (throughput,
   fault-survival) trade-off.
+
+Batched evaluation (docs/search.md — the throughput half of ROADMAP open
+item 3): :meth:`CascadeEvaluator.evaluate_batch` evaluates a whole
+generation at once. l1 validity/build and l3 analytic costing are pure
+trace-time math per candidate; the expensive part — the l2 interpret
+execution — fans out across a bounded ``concurrent.futures`` worker pool
+(``batch_workers``). Each pool task runs the *same* guarded per-candidate
+cascade the sequential path runs (same ``_run_l2`` seam, same
+``timeout_s``/quarantine discipline: the abandonable deadline thread stays
+per candidate, so a wedged candidate releases its pool slot at the
+deadline), with record/quarantine *publication* deferred and replayed in
+input order — so scores, levels, retries, ``EvalResult``s and the
+``records``/``quarantine`` streams are identical to calling
+:meth:`evaluate` per candidate (wall-clock timings in ``levels_s`` aside).
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 import traceback
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import jax
@@ -64,6 +80,7 @@ class Candidate:
     cid: int = -1
     result: EvalResult | None = None
     code_text: str = ""           # jaxpr text of the built program
+    cached: bool = False          # result reused from a warm-start store
 
     @property
     def score(self):
@@ -73,7 +90,8 @@ class Candidate:
 class CascadeEvaluator:
     def __init__(self, workload, mesh, hw, *, rtol=2e-3, wallclock=False,
                  verify_inputs=None, timeout_s=None, l2_retries=1,
-                 backoff_s=0.05, fault_plans=(), fault_weight=0.0):
+                 backoff_s=0.05, fault_plans=(), fault_weight=0.0,
+                 batch_workers=None):
         self.workload = workload
         self.mesh = mesh
         self.hw = hw
@@ -84,6 +102,8 @@ class CascadeEvaluator:
         self.backoff_s = backoff_s
         self.fault_plans = tuple(fault_plans)
         self.fault_weight = fault_weight
+        self.batch_workers = max(1, int(
+            batch_workers or min(4, os.cpu_count() or 1)))
         self.quarantine = []          # wedged-candidate diagnostics
         self.records = []             # telemetry.EvalRecord per evaluation
         key = jax.random.PRNGKey(1234)
@@ -91,17 +111,67 @@ class CascadeEvaluator:
         self.expected = workload.reference(*self.inputs)
 
     def evaluate(self, cand: Candidate) -> EvalResult:
-        """Evaluate under the wall-clock budget: the cascade body runs on
-        a daemon thread; past ``timeout_s`` the candidate is quarantined
-        (the wedged thread is abandoned — it holds no locks the search
-        needs) and the slow path moves on."""
+        """Evaluate one candidate under the wall-clock budget, publishing
+        its record (and quarantine entry, if any) immediately."""
+        res, _ = self._guarded(cand, publish=True)
+        return res
+
+    def evaluate_batch(self, cands, *, max_workers=None) -> list:
+        """Evaluate a whole generation at once — the parity contract
+        (docs/search.md): the returned ``EvalResult``s, the appended
+        ``records`` and the ``quarantine`` entries are identical to calling
+        :meth:`evaluate` per candidate in order (wall timings aside).
+
+        The l2 interpret executions fan out across a bounded worker pool of
+        at most ``max_workers`` (default ``batch_workers``) threads; l1
+        build/lower and l3 analytic costing ride the same per-candidate
+        pass (pure trace-time math — cheap and thread-safe). Each pool task
+        keeps the sequential path's per-candidate ``timeout_s`` discipline:
+        the abandonable deadline thread is spawned inside the pool task, so
+        a wedged candidate frees its pool slot at the deadline instead of
+        starving the batch. Publication of records and quarantine entries
+        is deferred and replayed in input order after the pool drains."""
+        cands = list(cands)
+        if not cands:
+            return []
+        workers = max(1, min(int(max_workers or self.batch_workers),
+                             len(cands)))
+        outs = [None] * len(cands)
+
+        def one(i):
+            outs[i] = self._guarded(cands[i], publish=False)
+
+        if workers == 1:
+            for i in range(len(cands)):
+                one(i)
+        else:
+            with ThreadPoolExecutor(max_workers=workers,
+                                    thread_name_prefix="cascade-batch") as px:
+                list(px.map(one, range(len(cands))))
+        results = []
+        for res, qentry in outs:
+            if res.record is not None:
+                self.records.append(res.record)
+            if qentry is not None:
+                self.quarantine.append(qentry)
+            results.append(res)
+        return results
+
+    def _guarded(self, cand: Candidate, publish=True):
+        """The full timeout-guarded cascade for one candidate: the body
+        runs on a daemon thread; past ``timeout_s`` the candidate is
+        quarantined (the wedged thread is abandoned — it holds no locks
+        the search needs) and the caller moves on. Returns ``(result,
+        quarantine_entry_or_None)``; with ``publish=False`` nothing is
+        appended to ``records``/``quarantine`` — the batch path replays
+        publication in input order."""
         if not self.timeout_s:
-            return self._evaluate(cand)
+            return self._evaluate(cand, publish=publish), None
         box = {}
 
         def run():
             try:
-                box["res"] = self._evaluate(cand)
+                box["res"] = self._evaluate(cand, publish=publish)
             except BaseException as e:        # surfaced below, never lost
                 box["err"] = e
 
@@ -119,19 +189,22 @@ class CascadeEvaluator:
             cand._quarantined = True
             res = EvalResult(0, 0.0, diagnostic=diag, quarantined=True)
             res = self._record(cand, res, {"quarantine": elapsed},
-                               force=True)
-            self.quarantine.append({
+                               force=True, publish=publish)
+            entry = {
                 "cid": cand.cid, "directive": repr(cand.directive),
                 "elapsed_s": elapsed, "diagnostic": diag,
-                "record": res.record.to_dict()})
-            return res
+                "record": res.record.to_dict()}
+            if publish:
+                self.quarantine.append(entry)
+            return res, entry
         if "err" in box:
             elapsed = time.perf_counter() - t0
             e = box["err"]
             res = EvalResult(0, 0.0, diagnostic="evaluator error:\n" + "".join(
                 traceback.format_exception(type(e), e, e.__traceback__))[-1500:])
-            return self._record(cand, res, {"error": elapsed})
-        return box["res"]
+            return self._record(cand, res, {"error": elapsed},
+                                publish=publish), None
+        return box["res"], None
 
     def quarantine_report(self):
         """Diagnostics of every candidate abandoned at the deadline."""
@@ -143,12 +216,14 @@ class CascadeEvaluator:
         return jfn(*self.inputs)
 
     def _record(self, cand, res: EvalResult, levels, *, fault_penalty_ms=0.0,
-                force=False) -> EvalResult:
+                force=False, publish=True) -> EvalResult:
         """Attach the structured telemetry row for one evaluation; every
         evaluate path (success, l1/l2 fail, error, quarantine) routes
         through here. A candidate already quarantined by the deadline
         watcher is skipped unless ``force``d — the abandoned worker thread
-        must not append a late duplicate."""
+        must not append a late duplicate. ``publish=False`` attaches the
+        record to the result only; the batch path appends it to
+        ``records`` later, in input order."""
         if getattr(cand, "_quarantined", False) and not force:
             return res
         from repro.core.telemetry import EvalRecord
@@ -169,10 +244,11 @@ class CascadeEvaluator:
             diagnostic=res.diagnostic,
             elapsed_s=float(sum(levels.values())))
         res.record = rec
-        self.records.append(rec)
+        if publish:
+            self.records.append(rec)
         return res
 
-    def _evaluate(self, cand: Candidate) -> EvalResult:
+    def _evaluate(self, cand: Candidate, publish=True) -> EvalResult:
         d = cand.directive
         levels = {}
         # ---- l1: directive validity + build + trace/compile -------------
@@ -180,7 +256,7 @@ class CascadeEvaluator:
         if viol:
             return self._record(
                 cand, EvalResult(0, 0.0, diagnostic="invalid directive: "
-                                 + "; ".join(viol)), levels)
+                                 + "; ".join(viol)), levels, publish=publish)
         t1 = time.perf_counter()
         try:
             fn = self.workload.build(d, self.mesh)
@@ -191,7 +267,8 @@ class CascadeEvaluator:
             levels["l1"] = time.perf_counter() - t1
             return self._record(
                 cand, EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
-                                 + traceback.format_exc()[-1500:]), levels)
+                                 + traceback.format_exc()[-1500:]), levels,
+                publish=publish)
         levels["l1"] = time.perf_counter() - t1
         # ---- l2: numerical verification ---------------------------------
         # transient execution errors retry with backoff; a deterministic
@@ -209,7 +286,7 @@ class CascadeEvaluator:
                         cand, EvalResult(1, 0.0, retries=retries,
                                          diagnostic="l2 execution failed:\n"
                                          + traceback.format_exc()[-1500:]),
-                        levels)
+                        levels, publish=publish)
                 retries += 1
                 time.sleep(self.backoff_s * retries)
         tol = self.rtol
@@ -225,7 +302,7 @@ class CascadeEvaluator:
                     cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
                         "l2 verify failed: non-finite values (deadlock-free "
                         "but corrupt transfer — check completion/ordering)")),
-                    levels)
+                    levels, publish=publish)
             err = np.max(np.abs(got - exp)) / (np.max(np.abs(exp)) + 1e-9)
             if err > tol:
                 levels["l2"] = time.perf_counter() - t2
@@ -233,7 +310,8 @@ class CascadeEvaluator:
                     cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
                         f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
                         f"(placement={d.placement}, "
-                        f"completion={d.completion})")), levels)
+                        f"completion={d.completion})")), levels,
+                    publish=publish)
         levels["l2"] = time.perf_counter() - t2
         # ---- l3: benchmark ----------------------------------------------
         t3 = time.perf_counter()
@@ -265,4 +343,4 @@ class CascadeEvaluator:
                              t_wall_ms=t_wall, fault_report=fault_report,
                              retries=retries,
                              diagnostic=f"ok: modeled {t_ms:.3f} ms"),
-            levels, fault_penalty_ms=t_eff - t_ms)
+            levels, fault_penalty_ms=t_eff - t_ms, publish=publish)

@@ -133,6 +133,26 @@ class Directive:
         return (self.backend, self.placement, self.completion)
 
 
+def directive_key(d: Directive) -> str:
+    """Canonical identity of a point in C: the ``as_dict`` form, JSON-encoded
+    with sorted keys. Two directives that realize the same configuration map
+    to the same key regardless of tunables-tuple ordering — this is the
+    novelty-filter index key (``core/database.py``) and, combined with the
+    workload + hardware fingerprints, the warm-start eval-cache key
+    (docs/search.md)."""
+    import json
+    return json.dumps(d.as_dict(), sort_keys=True)
+
+
+def directive_from_dict(obj: dict) -> Directive:
+    """Inverse of :meth:`Directive.as_dict` — the persistence decoder for
+    ``CandidateDB.load`` / ``MapElitesArchive.load``."""
+    kw = {k: obj[k] for k in DIMENSIONS}
+    kw["contexts"] = int(kw["contexts"])
+    tun = obj.get("tunables", {})
+    return Directive(**kw, tunables=tuple(sorted(tun.items())))
+
+
 CONSERVATIVE = Directive(
     backend="XLA_COLLECTIVE", completion="BARRIER", placement="DEFERRED",
     scope="WORLD", issuer="KERNEL", granularity="PER_PEER",

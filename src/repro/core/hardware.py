@@ -36,6 +36,15 @@ class HardwareContext:
     has_dcn: bool
 
     @property
+    def fingerprint(self) -> str:
+        """Stable identity of the deployment target — the hardware half of
+        the warm-start eval-cache key (docs/search.md): a cached score is
+        only reusable on the chip/mesh it was modeled for."""
+        shape = "x".join(str(s) for s in self.mesh_shape)
+        return (f"{self.chip.name}|mesh={shape}"
+                f"|axes={','.join(self.mesh_axes)}|dcn={int(self.has_dcn)}")
+
+    @property
     def topology_summary(self) -> str:
         axes = ", ".join(f"{a}={s}" for a, s in zip(self.mesh_axes, self.mesh_shape))
         kind = "multi-pod (ICI intra-pod + DCN cross-pod)" if self.has_dcn else \

@@ -112,6 +112,18 @@ class EvalRecord:
     def from_json(cls, s):
         return cls.from_dict(json.loads(s))
 
+    def deterministic_dict(self):
+        """The run-deterministic projection of the row: everything except
+        the wall-clock fields (``levels_s``, ``elapsed_s``, ``t_wall_ms``).
+        This is the batched-vs-sequential parity comparison key
+        (docs/search.md): two evaluations of the same candidate must agree
+        on this dict bit for bit; only how long the wall waited may
+        differ."""
+        d = self.to_dict()
+        for k in ("levels_s", "elapsed_s", "t_wall_ms"):
+            d.pop(k)
+        return d
+
 
 # ------------------------------------------------------------ search series
 
@@ -130,6 +142,16 @@ class SearchTelemetry:
         self.coverage = {}           # gen -> archive cells occupied
         self._best = 0.0
         self._wins = {}              # mutation form -> win count
+        # warm-start / transfer counters (docs/search.md). Deliberately
+        # batch-invariant: the batched and sequential evaluators produce
+        # byte-identical payloads, so batching stats stay OUT of here.
+        self.scale = {"warm_start": False, "cache_hits": 0,
+                      "transferred_seeds": 0}
+
+    def note_scale(self, **kw):
+        """Stamp warm-start/transfer counters onto the run (slow_path)."""
+        for k, v in kw.items():
+            self.scale[k] = v
 
     def observe(self, record: EvalRecord):
         self.records.append(record)
@@ -198,9 +220,13 @@ class SearchTelemetry:
         must be diff-stable for a checked-in artifact)."""
         best = max(self.records, key=lambda r: r.score, default=None)
         return {
-            "schema": "bench-search/v1",
+            "schema": "bench-search/v2",
             "workload": self.workload,
             "meta": dict(meta or {}),
+            "scale": {"warm_start": bool(self.scale["warm_start"]),
+                      "cache_hits": int(self.scale["cache_hits"]),
+                      "transferred_seeds":
+                          int(self.scale["transferred_seeds"])},
             "totals": {
                 "evals": len(self.records),
                 "ok": sum(1 for r in self.records if r.level >= 3),

@@ -99,6 +99,18 @@ class Workload:
     def default_tunables(self):
         return {}
 
+    def fingerprint(self) -> str:
+        """Stable identity of this workload *instance* (class name + scalar
+        shape attributes) — the workload half of the warm-start eval-cache
+        key (docs/search.md). Two instances with the same deployment shape
+        fingerprint identically; a different shape (or workload) never
+        reuses a cached score."""
+        attrs = {k: v for k, v in vars(self).items()
+                 if not k.startswith("_")
+                 and isinstance(v, (int, float, str, bool))}
+        body = ",".join(f"{k}={v}" for k, v in sorted(attrs.items()))
+        return f"{self.name}|{body}"
+
     # --- the fault contract (core/faults.py, docs/kernels.md) ---
     def degrade(self, live_ranks):
         """Membership-aware reshape onto the surviving ranks: a **smaller

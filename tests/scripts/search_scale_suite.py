@@ -1,0 +1,188 @@
+"""Scaled-search suite at simulated ranks (default 4): the executable
+acceptance gate of the batched cascade + warm-start store (docs/search.md,
+ROADMAP open item 3).
+
+Covers:
+  * batched ring_attention search — a real 4-rank interpret-mode workload
+    run through ``slow_path(batched=True)`` must produce the identical
+    ``db.history()`` and byte-identical telemetry payload as the
+    sequential run (the parity contract, here at multi-rank scale);
+  * warm-start economics on gemm_allgather — a cold search persists its
+    store; the warm resume must serve every stored directive from cache
+    (zero re-evaluations) and reach the cold run's best score in at most
+    half the fresh evaluations the cold run needed, with coverage resuming
+    at least where it left off;
+  * cross-workload transfer payoff — the tuned gemm_allgather store seeds
+    a moe_dispatch search via ``transfer_seeds`` (tile-knob alias mapping
+    + validity repair); the transferred search must reach the cold-start
+    moe_dispatch best score in at most half the fresh evaluations the
+    cold search needed;
+  * the deterministic ``BENCH_search_scale.json`` artifact recording all
+    of the above — wall timings excluded, so the checked-in copy must
+    match regeneration byte for byte (CI staleness gate).
+"""
+import argparse
+import json
+import pathlib
+
+import jax
+
+from repro.compat import make_mesh
+from repro.core import (CandidateDB, SlowPathConfig, directive_key,
+                        extract_hardware_context, fast_path, slow_path)
+from repro.core.cascade import CascadeEvaluator
+from repro.workloads import get_workload
+
+args = argparse.ArgumentParser()
+args.add_argument("--out", default="BENCH_search_scale.json",
+                  help="path for the search-scale benchmark artifact")
+A = args.parse_args()
+
+n_dev = len(jax.devices())
+assert n_dev >= 4, f"suite needs >=4 simulated ranks, got {n_dev}"
+mesh = make_mesh((4,), ("x",))
+hw = extract_hardware_context(mesh)
+bench = {"schema": "bench-search-scale/v1", "n_dev": 4}
+
+# ---------------------------------------------- batched parity at 4 ranks
+ring = get_workload("ring_attention", n_dev=4, BH=4, seq=512, hd=64)
+ring_seed = fast_path(ring, mesh, hw)
+ring_cfg = SlowPathConfig(islands=2, generations=3, seed=2)
+seq = slow_path(ring_seed, mesh, hw, ring_cfg)
+bat = slow_path(ring_seed, mesh, hw, ring_cfg, batched=True, eval_workers=3)
+assert seq.history == bat.history, "batched ring search diverged from sequential"
+p_seq = json.dumps(seq.telemetry.payload(), sort_keys=True)
+p_bat = json.dumps(bat.telemetry.payload(), sort_keys=True)
+assert p_seq == p_bat, "batched telemetry payload diverged"
+assert bat.best.score >= bat.seed_score
+print(f"ring_attention batched parity ok ({len(bat.history)} evals, "
+      f"best {bat.best.score:.2f})")
+bench["ring_parity"] = {"evals": len(bat.history),
+                        "best_score": bat.best.score,
+                        "seed_score": bat.seed_score,
+                        "history_equal": True, "payload_equal": True}
+
+
+# ------------------------------------------------- warm-start economics
+class CountingEvaluator(CascadeEvaluator):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.evaluated = []
+
+    def _evaluate(self, cand, publish=True):
+        self.evaluated.append(directive_key(cand.directive))
+        return super()._evaluate(cand, publish=publish)
+
+
+gemm = get_workload("gemm_allgather", n_dev=4, M=2048, K=2048, N=2048)
+gemm_seed = fast_path(gemm, mesh, hw)
+gemm_cfg = SlowPathConfig(islands=2, generations=4, seed=1)
+store = "/tmp/cuco_search_scale_store.json"
+cold = slow_path(gemm_seed, mesh, hw, gemm_cfg, batched=True, save_to=store)
+cold_best = cold.best.score
+# fresh evaluations the cold run needed before first reaching its best
+cold_evals_to_best = next(i + 1 for i, r in enumerate(cold.db.records)
+                          if r.score >= cold_best)
+
+ev = CountingEvaluator(gemm, mesh, hw)
+warm = slow_path(gemm_seed, mesh, hw, gemm_cfg, evaluator=ev,
+                 warm_start=store)
+saved_keys = {directive_key(r.directive) for r in cold.db.records}
+assert not (set(ev.evaluated) & saved_keys), \
+    "warm start re-evaluated a cached directive"
+warm_fresh_to_best = 0
+for r in warm.db.records:
+    if not r.cached:
+        warm_fresh_to_best += 1
+    if r.score >= cold_best:
+        break
+else:
+    raise AssertionError("warm start never reached the cold-start best")
+assert warm_fresh_to_best <= cold_evals_to_best // 2, (
+    f"warm start needed {warm_fresh_to_best} fresh evals to reach the "
+    f"cold best; cold needed {cold_evals_to_best} (payoff must be >=2x)")
+assert warm.archive.coverage() >= cold.archive.coverage()
+sc = warm.telemetry.scale
+assert sc["warm_start"] and sc["cache_hits"] > 0
+print(f"gemm_allgather warm start ok (cold {cold_evals_to_best} evals to "
+      f"best, warm {warm_fresh_to_best} fresh; {sc['cache_hits']} cache hits)")
+bench["warm_start"] = {
+    "cold_evals_to_best": cold_evals_to_best,
+    "warm_fresh_evals_to_best": warm_fresh_to_best,
+    "cache_hits": sc["cache_hits"],
+    "cold_best_score": cold_best,
+    "warm_best_score": warm.best.score,
+    "coverage_saved": cold.archive.coverage(),
+    "coverage_resumed": warm.archive.coverage(),
+}
+
+# the persisted store round-trips exactly
+db2 = CandidateDB.load(store)
+assert db2.history() == cold.db.history()
+print(f"store round-trip ok ({len(db2.records)} records)")
+
+# -------------------------------------------------- cross-workload transfer
+moe = get_workload("moe_dispatch", n_dev=4, tokens_per_rank=1024, d=256,
+                   f=512)
+moe_seed = fast_path(moe, mesh, hw)
+moe_cfg = SlowPathConfig(islands=3, generations=3, seed=2)
+moe_cold = slow_path(moe_seed, mesh, hw, moe_cfg, batched=True)
+moe_cold_best = moe_cold.best.score
+moe_cold_to_best = next(i + 1 for i, r in enumerate(moe_cold.db.records)
+                        if r.score >= moe_cold_best)
+
+xfer = slow_path(moe_seed, mesh, hw, moe_cfg, batched=True,
+                 warm_start=store)
+xs = xfer.telemetry.scale
+assert xs["warm_start"] and xs["transferred_seeds"] > 0, xs
+assert xs["cache_hits"] == 0, "a cached score crossed a fingerprint boundary"
+assert xfer.best.score >= xfer.seed_score
+transfer_gen0 = [r for r in xfer.db.records
+                 if r.gen == 0 and r.mutation == "transfer-seed"]
+assert transfer_gen0, "no transferred elite seeded generation zero"
+# the acceptance bar: the transferred search reaches the cold-start best
+# in at most half the fresh evaluations the cold search needed
+xfer_fresh_to_best = 0
+for r in xfer.db.records:
+    if not r.cached:
+        xfer_fresh_to_best += 1
+    if r.score >= moe_cold_best:
+        break
+else:
+    raise AssertionError("transferred search never reached the cold best")
+assert xfer_fresh_to_best <= moe_cold_to_best // 2, (
+    f"transferred moe_dispatch search needed {xfer_fresh_to_best} fresh "
+    f"evals to reach the cold best; cold needed {moe_cold_to_best} "
+    "(payoff must be >=2x)")
+print(f"gemm_allgather -> moe_dispatch transfer ok "
+      f"({xs['transferred_seeds']} seeds mapped, {len(transfer_gen0)} "
+      f"seeded; cold {moe_cold_to_best} evals to best, transferred "
+      f"{xfer_fresh_to_best} fresh)")
+bench["transfer"] = {
+    "transferred_seeds": xs["transferred_seeds"],
+    "gen0_transfer_seeds": len(transfer_gen0),
+    "gen0_transfer_ok": sum(1 for r in transfer_gen0
+                            if r.result and r.result.ok),
+    "cold_evals_to_best": moe_cold_to_best,
+    "transfer_fresh_evals_to_best": xfer_fresh_to_best,
+    "cold_best_score": moe_cold_best,
+    "best_score": xfer.best.score,
+    "seed_score": xfer.seed_score,
+}
+
+# the checked-in search artifact rode the same schema bump: the byte-level
+# staleness gate lives in telemetry_suite; here we pin the schema + the
+# scale section so a stale v1 artifact fails fast in this job too
+repo_bench = pathlib.Path(__file__).resolve().parents[2] / "BENCH_search.json"
+search_payload = json.loads(repo_bench.read_text())
+assert search_payload["schema"] == "bench-search/v2", \
+    "BENCH_search.json is stale — re-run telemetry_suite.py and commit"
+assert set(search_payload["scale"]) == {"warm_start", "cache_hits",
+                                        "transferred_seeds"}
+print("BENCH_search.json schema/scale section ok")
+
+with open(A.out, "w") as f:
+    json.dump(bench, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"wrote {A.out}")
+print("ALL OK")

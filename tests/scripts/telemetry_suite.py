@@ -84,7 +84,7 @@ meta = {"islands": cfg.islands, "generations": cfg.generations,
         "seed": cfg.seed, "shape": "n_dev=4 M=4096 K=4096 N=4096"}
 tel.write(A.out, meta=meta)
 payload = json.loads(open(A.out).read())
-assert payload["schema"] == "bench-search/v1"
+assert payload["schema"] == "bench-search/v2"
 assert payload["best"]["score"] == payload["totals"]["best_score"]
 assert "Infinity" not in open(A.out).read()
 print(f"wrote {A.out} ({payload['totals']['evals']} evals, "

@@ -96,11 +96,36 @@ def test_telemetry_suite(tmp_path):
     assert "ALL OK" in out
     import json
     regen = json.loads(out_json.read_text())
-    assert regen["schema"] == "bench-search/v1"
+    assert regen["schema"] == "bench-search/v2"
     checked_in = pathlib.Path(__file__).parents[1] / "BENCH_search.json"
     assert json.loads(checked_in.read_text()) == regen, (
         "regenerate with: XLA_FLAGS=--xla_force_host_platform_device_count=4 "
         "PYTHONPATH=src python tests/scripts/telemetry_suite.py")
+
+
+def test_search_scale_suite(tmp_path):
+    """Scaled search end to end: batched ring_attention parity at 4 ranks,
+    gemm_allgather warm-start economics (cold best reached in <= half the
+    fresh evaluations), gemm_allgather -> moe_dispatch transfer seeding —
+    and the regenerated BENCH_search_scale.json must match the checked-in
+    artifact byte for byte (the searches are deterministic; a diff means
+    the search changed and the artifact needs re-checking-in)."""
+    out_json = tmp_path / "BENCH_search_scale.json"
+    out = run_script("search_scale_suite.py", args=["--out", str(out_json)])
+    assert "ALL OK" in out
+    import json
+    regen = json.loads(out_json.read_text())
+    assert regen["schema"] == "bench-search-scale/v1"
+    w = regen["warm_start"]
+    assert w["warm_fresh_evals_to_best"] <= w["cold_evals_to_best"] // 2
+    assert w["coverage_resumed"] >= w["coverage_saved"]
+    x = regen["transfer"]
+    assert x["transferred_seeds"] > 0
+    assert x["transfer_fresh_evals_to_best"] <= x["cold_evals_to_best"] // 2
+    checked_in = pathlib.Path(__file__).parents[1] / "BENCH_search_scale.json"
+    assert json.loads(checked_in.read_text()) == regen, (
+        "regenerate with: XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+        "PYTHONPATH=src python tests/scripts/search_scale_suite.py")
 
 
 def test_serving_suite(tmp_path):

@@ -1,0 +1,152 @@
+"""Warm-start persistence round-trip properties (docs/search.md).
+
+Property (hypothesis, skipped if unavailable — mirroring
+tests/test_schedules.py): for any small search configuration, save → load
+→ resume re-evaluates **zero** directives the store already scored (the
+fingerprint-scoped cache serves them), resumed archive coverage is at
+least the saved coverage, and a corrupted or version-mismatched store
+degrades to a clean cold start. Plus direct store round-trips for
+``CandidateDB`` and ``MapElitesArchive`` and their ``StoreError``
+surfaces.
+"""
+import json
+
+import pytest
+
+from repro.core import (CandidateDB, MapElitesArchive, SlowPathConfig,
+                        StoreError, directive_key, extract_hardware_context,
+                        fast_path, slow_path)
+from repro.core.cascade import CascadeEvaluator
+from repro.launch.mesh import make_mesh
+from repro.workloads import get_workload
+
+# property tests need hypothesis (optional test dep, like
+# tests/test_schedules.py): the property skips, the direct store tests run.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def rig():
+    wl = get_workload("gemm_allgather", n_dev=1, M=256, K=256, N=256)
+    mesh = make_mesh((1,), ("x",))
+    hw = extract_hardware_context(mesh)
+    seed = fast_path(wl, mesh, hw)
+    return wl, mesh, hw, seed
+
+
+class _CountingEvaluator(CascadeEvaluator):
+    """Records the directive key of every evaluation that actually runs
+    the cascade (cache hits bypass the evaluator entirely)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.evaluated = []
+
+    def _evaluate(self, cand, publish=True):
+        self.evaluated.append(directive_key(cand.directive))
+        return super()._evaluate(cand, publish=publish)
+
+
+def _warm_start_round_trip(rig, tmp, run_seed, islands, generations):
+    wl, mesh, hw, seed = rig
+    store = str(tmp / "db.json")
+    cfg = SlowPathConfig(islands=islands, generations=generations,
+                         seed=run_seed)
+    cold = slow_path(seed, mesh, hw, cfg, save_to=store)
+    saved_keys = {directive_key(r.directive) for r in cold.db.records
+                  if r.result is not None}
+
+    ev = _CountingEvaluator(wl, mesh, hw)
+    warm = slow_path(seed, mesh, hw, cfg, evaluator=ev, warm_start=store)
+
+    # zero cached directives re-evaluated: every cascade run in the warm
+    # search was for a directive the store had never scored
+    assert not (set(ev.evaluated) & saved_keys)
+    cached = [r for r in warm.db.records if r.cached]
+    assert warm.telemetry.scale["warm_start"] is True
+    assert warm.telemetry.scale["cache_hits"] == len(cached) > 0
+    assert all(directive_key(r.directive) in saved_keys for r in cached)
+
+    # resumed coverage can only grow
+    assert warm.archive.coverage() >= cold.archive.coverage()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None)
+    @given(run_seed=st.integers(0, 5), islands=st.integers(2, 3),
+           generations=st.integers(1, 2))
+    def test_warm_start_round_trip_property(rig, tmp_path_factory, run_seed,
+                                            islands, generations):
+        _warm_start_round_trip(rig, tmp_path_factory.mktemp("store"),
+                               run_seed, islands, generations)
+else:
+    def test_warm_start_round_trip_property(rig, tmp_path):
+        """Hypothesis unavailable: run the property once at a fixed point
+        so the round-trip invariant is still exercised in tier-1."""
+        _warm_start_round_trip(rig, tmp_path, 2, 2, 2)
+
+
+def test_corrupt_and_version_mismatch_store_cold_start(rig, tmp_path):
+    wl, mesh, hw, seed = rig
+    cfg = SlowPathConfig(islands=2, generations=1, seed=0)
+    store = str(tmp_path / "db.json")
+    cold = slow_path(seed, mesh, hw, cfg, save_to=store)
+
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{definitely not json")
+    mismatch = tmp_path / "mismatch.json"
+    payload = json.loads((tmp_path / "db.json").read_text())
+    payload["version"] = 999
+    mismatch.write_text(json.dumps(payload))
+
+    for bad in (str(corrupt), str(mismatch), str(tmp_path / "missing.json")):
+        run = slow_path(seed, mesh, hw, cfg, warm_start=bad)
+        assert run.telemetry.scale == {"warm_start": False, "cache_hits": 0,
+                                       "transferred_seeds": 0}
+        assert run.history == cold.history     # bit-identical cold search
+
+    with pytest.raises(StoreError):
+        CandidateDB.load(str(corrupt))
+    with pytest.raises(StoreError):
+        CandidateDB.load(str(mismatch))
+    with pytest.raises(StoreError):
+        MapElitesArchive.load(store)           # wrong store kind
+
+
+def test_db_and_archive_store_round_trip(rig, tmp_path):
+    wl, mesh, hw, seed = rig
+    cfg = SlowPathConfig(islands=2, generations=2, seed=1)
+    res = slow_path(seed, mesh, hw, cfg)
+    wl_fp, hw_fp = wl.fingerprint(), hw.fingerprint
+
+    dbp = str(tmp_path / "db.json")
+    res.db.save(dbp, workload=wl_fp, hardware=hw_fp)
+    db2 = CandidateDB.load(dbp)
+    assert db2.saved_meta == {"workload": wl_fp, "hardware": hw_fp}
+    assert db2.history() == res.db.history()
+    assert [directive_key(r.directive) for r in db2.records] \
+        == [directive_key(r.directive) for r in res.db.records]
+    assert [(r.result.level, r.result.score, r.result.retries)
+            for r in db2.records] \
+        == [(r.result.level, r.result.score, r.result.retries)
+            for r in res.db.records]
+    # the novelty index came back with the records
+    for r in res.db.records:
+        assert not db2.is_novel(r.directive)
+
+    arcp = str(tmp_path / "archive.json")
+    res.archive.save(arcp, workload=wl_fp, hardware=hw_fp)
+    arc2 = MapElitesArchive.load(arcp)
+    assert arc2.saved_meta == {"workload": wl_fp, "hardware": hw_fp}
+    assert set(arc2.cells) == set(res.archive.cells)
+    for b, cand in arc2.cells.items():
+        assert cand.score == res.archive.cells[b].score
+
+    # saving is deterministic byte-for-byte
+    dbp2 = str(tmp_path / "db2.json")
+    db2.save(dbp2, workload=wl_fp, hardware=hw_fp)
+    assert open(dbp).read() == open(dbp2).read()

@@ -200,7 +200,7 @@ def test_search_telemetry_series_and_payload():
     # stream only won the very first observation (1.0 beat the empty best)
     assert stats["coarse"]["wins"] == 3 and stats["fine"]["wins"] == 1
     payload = tel.payload(meta={"generations": 3})
-    assert payload["schema"] == "bench-search/v1"
+    assert payload["schema"] == "bench-search/v2"
     assert payload["totals"]["evals"] == 6
     assert payload["best"]["score"] == 30.0
     json.dumps(payload)                       # JSON-clean end to end
