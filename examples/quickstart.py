@@ -4,11 +4,9 @@
 """
 import argparse
 
-import jax
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.models import init_params
 from repro.serve import Engine, ServeConfig
 from repro.train import TrainConfig, train
 

@@ -9,7 +9,6 @@ MoE overlap schedule enabled.
 2-way model parallel.)
 """
 import argparse
-import dataclasses
 
 import jax
 

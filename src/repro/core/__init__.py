@@ -27,6 +27,12 @@ from repro.core.schedule import (CollectiveSchedule, BroadcastSchedule,
                                  make_ring_schedule, make_schedule,
                                  respill_counts, sanitize_tile,
                                  send_window_depths)
+from repro.core.verify import (CHECKS, MUTATION_CLASSES, Op, Program,
+                               VerifyError, VerifyReport, apply_mutation,
+                               degrade_errors, directive_programs,
+                               lower_schedule, mutation_corpus,
+                               verify_directive, verify_program,
+                               verify_schedule)
 from repro.core.faults import (FaultPlan, FaultSpec, fault_cost,
                                inject_wire_fault, survival_report)
 from repro.core.comm_graph import analyze as analyze_comm_graph
@@ -55,6 +61,10 @@ __all__ = [
     "RingSchedule", "SendWindow", "check_live", "make_broadcast_schedule",
     "make_ring_schedule", "make_schedule", "respill_counts", "sanitize_tile",
     "send_window_depths",
+    "CHECKS", "MUTATION_CLASSES", "Op", "Program", "VerifyError",
+    "VerifyReport", "apply_mutation", "degrade_errors",
+    "directive_programs", "lower_schedule", "mutation_corpus",
+    "verify_directive", "verify_program", "verify_schedule",
     "FaultPlan", "FaultSpec", "fault_cost", "inject_wire_fault",
     "survival_report",
     "analyze_comm_graph", "Candidate", "CascadeEvaluator", "EvalResult",

@@ -1,7 +1,12 @@
 """Cascade evaluation (paper §3.3): every offspring passes a fast-fail
-three-level cascade — l1 build+compile, l2 numerical verification against the
-workload oracle, l3 benchmark. Score = 10000 / (1 + t_ms); candidates failing
-l1/l2 score 0 and carry a diagnostic for the feedback loop.
+cascade — l0 static schedule verification (``core/verify.py``: the
+symbolic lockstep executor proves deadlock freedom, slot-reuse safety,
+window-cap/drain invariants and wire conservation before any tracing),
+l1 build+compile, l2 numerical verification against the workload oracle,
+l3 benchmark. Score = 10000 / (1 + t_ms); candidates failing l0/l1/l2
+score 0 and carry a diagnostic for the feedback loop plus a deterministic
+``rejection`` class ("l0:<checker code>", "l1:build", "l2:mismatch", ...)
+for telemetry.
 
 l3 on this CPU-only container is the analytic v5e roofline composition of the
 workload at its full deployment shape (DESIGN.md §2); ``wallclock=True``
@@ -46,7 +51,6 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.design_space import Directive
@@ -63,6 +67,7 @@ class EvalResult:
     fault_report: dict = field(default_factory=dict)  # plan -> healthy/degraded ms
     quarantined: bool = False     # abandoned at the wall-clock deadline
     retries: int = 0              # flaky-l2 re-executions that were needed
+    rejection: str = ""           # deterministic rejection class ("" = passed)
     record: object = None         # telemetry.EvalRecord (every path sets one)
 
     @property
@@ -182,17 +187,20 @@ class CascadeEvaluator:
         th.join(self.timeout_s)
         if th.is_alive():
             elapsed = time.perf_counter() - t0
+            stage = getattr(cand, "_stage", "")
             diag = (f"quarantined: evaluation exceeded {self.timeout_s:.2f}s "
-                    "wall-clock (wedged build/execute abandoned)")
+                    "wall-clock (wedged build/execute abandoned"
+                    + (f" at {stage}" if stage else "") + ")")
             # flag first: the abandoned thread must not append a late
             # duplicate record if it ever comes back from the wedge
             cand._quarantined = True
-            res = EvalResult(0, 0.0, diagnostic=diag, quarantined=True)
+            res = EvalResult(0, 0.0, diagnostic=diag, quarantined=True,
+                             rejection="quarantine")
             res = self._record(cand, res, {"quarantine": elapsed},
                                force=True, publish=publish)
             entry = {
                 "cid": cand.cid, "directive": repr(cand.directive),
-                "elapsed_s": elapsed, "diagnostic": diag,
+                "elapsed_s": elapsed, "diagnostic": diag, "stage": stage,
                 "record": res.record.to_dict()}
             if publish:
                 self.quarantine.append(entry)
@@ -200,7 +208,8 @@ class CascadeEvaluator:
         if "err" in box:
             elapsed = time.perf_counter() - t0
             e = box["err"]
-            res = EvalResult(0, 0.0, diagnostic="evaluator error:\n" + "".join(
+            res = EvalResult(0, 0.0, rejection="error",
+                             diagnostic="evaluator error:\n" + "".join(
                 traceback.format_exception(type(e), e, e.__traceback__))[-1500:])
             return self._record(cand, res, {"error": elapsed},
                                 publish=publish), None
@@ -214,6 +223,15 @@ class CascadeEvaluator:
         """The l2 execution boundary — a deliberate seam: tests and fault
         suites wrap it to inject flaky executions or wire faults."""
         return jfn(*self.inputs)
+
+    def _verify_l0(self, d):
+        """The l0 static-verification boundary — a seam like
+        :meth:`_run_l2`: tests wrap it to inject mutated programs.
+        Returns a ``verify.VerifyReport`` or ``None`` when the directive
+        realizes no collective schedule (XLA backends, solo tiers) — a
+        vacuous pass."""
+        from repro.core.verify import verify_directive
+        return verify_directive(self.workload, d)
 
     def _record(self, cand, res: EvalResult, levels, *, fault_penalty_ms=0.0,
                 force=False, publish=True) -> EvalResult:
@@ -242,7 +260,9 @@ class CascadeEvaluator:
             retries=res.retries, quarantined=res.quarantined,
             fault_penalty_ms=float(fault_penalty_ms), knobs=knobs,
             diagnostic=res.diagnostic,
-            elapsed_s=float(sum(levels.values())))
+            elapsed_s=float(sum(levels.values())),
+            rejection=res.rejection,
+            stage=getattr(cand, "_stage", ""))
         res.record = rec
         if publish:
             self.records.append(rec)
@@ -251,12 +271,27 @@ class CascadeEvaluator:
     def _evaluate(self, cand: Candidate, publish=True) -> EvalResult:
         d = cand.directive
         levels = {}
-        # ---- l1: directive validity + build + trace/compile -------------
+        # ---- l0: directive validity + static schedule verification ------
+        cand._stage = "l0"
         viol = self.workload.check(d, self.hw)
         if viol:
             return self._record(
-                cand, EvalResult(0, 0.0, diagnostic="invalid directive: "
+                cand, EvalResult(0, 0.0, rejection="invalid",
+                                 diagnostic="invalid directive: "
                                  + "; ".join(viol)), levels, publish=publish)
+        t0 = time.perf_counter()
+        vrep = self._verify_l0(d)
+        levels["l0"] = time.perf_counter() - t0
+        if vrep is not None and not vrep.ok:
+            # a structured VerifyError diagnostic: the mutation feedback
+            # loop reads the class prefix, telemetry keys on `rejection`
+            return self._record(
+                cand, EvalResult(0, 0.0,
+                                 rejection="l0:" + vrep.errors[0].code,
+                                 diagnostic="l0 schedule verify failed: "
+                                 + vrep.summary()), levels, publish=publish)
+        # ---- l1: build + trace/compile ----------------------------------
+        cand._stage = "l1"
         t1 = time.perf_counter()
         try:
             fn = self.workload.build(d, self.mesh)
@@ -266,13 +301,15 @@ class CascadeEvaluator:
         except Exception:
             levels["l1"] = time.perf_counter() - t1
             return self._record(
-                cand, EvalResult(0, 0.0, diagnostic="l1 build/lower failed:\n"
+                cand, EvalResult(0, 0.0, rejection="l1:build",
+                                 diagnostic="l1 build/lower failed:\n"
                                  + traceback.format_exc()[-1500:]), levels,
                 publish=publish)
         levels["l1"] = time.perf_counter() - t1
         # ---- l2: numerical verification ---------------------------------
         # transient execution errors retry with backoff; a deterministic
         # verify mismatch below never does
+        cand._stage = "l2"
         t2 = time.perf_counter()
         retries = 0
         while True:
@@ -284,6 +321,7 @@ class CascadeEvaluator:
                     levels["l2"] = time.perf_counter() - t2
                     return self._record(
                         cand, EvalResult(1, 0.0, retries=retries,
+                                         rejection="l2:execute",
                                          diagnostic="l2 execution failed:\n"
                                          + traceback.format_exc()[-1500:]),
                         levels, publish=publish)
@@ -299,7 +337,8 @@ class CascadeEvaluator:
             if not np.all(np.isfinite(got)):
                 levels["l2"] = time.perf_counter() - t2
                 return self._record(
-                    cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
+                    cand, EvalResult(1, 0.0, retries=retries,
+                                     rejection="l2:nonfinite", diagnostic=(
                         "l2 verify failed: non-finite values (deadlock-free "
                         "but corrupt transfer — check completion/ordering)")),
                     levels, publish=publish)
@@ -307,13 +346,15 @@ class CascadeEvaluator:
             if err > tol:
                 levels["l2"] = time.perf_counter() - t2
                 return self._record(
-                    cand, EvalResult(1, 0.0, retries=retries, diagnostic=(
+                    cand, EvalResult(1, 0.0, retries=retries,
+                                     rejection="l2:mismatch", diagnostic=(
                         f"l2 verify failed: rel err {err:.3e} > {tol:.0e} "
                         f"(placement={d.placement}, "
                         f"completion={d.completion})")), levels,
                     publish=publish)
         levels["l2"] = time.perf_counter() - t2
         # ---- l3: benchmark ----------------------------------------------
+        cand._stage = "l3"
         t3 = time.perf_counter()
         t_model = self.workload.analytic_cost(d, self.hw)
         t_ms = t_model * 1e3

@@ -61,7 +61,6 @@ class CommGraph:
         """Collapse consecutive compute eqns: [('compute', n), ('comm', node)]."""
         out = []
         run = 0
-        comm_iter = iter(self.nodes)
         for idx, kind, prim in self.order:
             if kind == "compute":
                 run += 1

@@ -4,11 +4,9 @@ ranked recommendations injected into the mutation context — generation-over-
 generation learning without touching the optimizer itself."""
 from __future__ import annotations
 
-from collections import defaultdict
 from dataclasses import dataclass, field
 
-from repro.core.design_space import (BACKENDS, COMPLETIONS, DIMENSIONS,
-                                     PLACEMENTS)
+from repro.core.design_space import BACKENDS, DIMENSIONS, PLACEMENTS
 
 
 @dataclass

@@ -22,8 +22,8 @@ import dataclasses
 import random
 from dataclasses import dataclass, field
 
-from repro.core.design_space import (CONSERVATIVE, DIMENSIONS, Directive,
-                                     is_valid, random_directive)
+from repro.core.design_space import (DIMENSIONS, Directive, is_valid,
+                                     random_directive)
 
 
 @dataclass

@@ -63,10 +63,15 @@ def _jsonable(x):
 class EvalRecord:
     """One candidate's structured evaluation row (see module docstring).
 
-    ``levels_s`` maps cascade level name ("l1", "l2", "l3", "wallclock")
-    to the wall seconds that level took; ``t_model_ms``/``t_wall_ms`` are
-    ``None`` (not inf) when the level was never reached, so the record
-    round-trips JSON exactly."""
+    ``levels_s`` maps cascade level name ("l0", "l1", "l2", "l3",
+    "wallclock") to the wall seconds that level took; ``t_model_ms``/
+    ``t_wall_ms`` are ``None`` (not inf) when the level was never
+    reached, so the record round-trips JSON exactly.  ``rejection`` is
+    the deterministic rejection class ("" on success, "invalid",
+    "l0:<checker code>", "l1:build", "l2:execute"/"l2:nonfinite"/
+    "l2:mismatch", "quarantine", "error"); ``stage`` is the cascade
+    level that was in flight when the record was cut (timing-dependent
+    for quarantines, so it is excluded from the parity projection)."""
     cid: int = -1
     gen: int = 0
     island: int = 0
@@ -83,6 +88,8 @@ class EvalRecord:
     knobs: dict = field(default_factory=dict)
     diagnostic: str = ""
     elapsed_s: float = 0.0
+    rejection: str = ""
+    stage: str = ""
 
     def to_dict(self):
         return {
@@ -99,6 +106,8 @@ class EvalRecord:
             "knobs": dict(self.knobs),
             "diagnostic": str(self.diagnostic),
             "elapsed_s": float(self.elapsed_s),
+            "rejection": str(self.rejection),
+            "stage": str(self.stage),
         }
 
     @classmethod
@@ -114,13 +123,15 @@ class EvalRecord:
 
     def deterministic_dict(self):
         """The run-deterministic projection of the row: everything except
-        the wall-clock fields (``levels_s``, ``elapsed_s``, ``t_wall_ms``).
+        the wall-clock fields (``levels_s``, ``elapsed_s``, ``t_wall_ms``)
+        and ``stage`` (the level in flight when a deadline fired is
+        timing-dependent; the ``rejection`` class is not and stays).
         This is the batched-vs-sequential parity comparison key
         (docs/search.md): two evaluations of the same candidate must agree
         on this dict bit for bit; only how long the wall waited may
         differ."""
         d = self.to_dict()
-        for k in ("levels_s", "elapsed_s", "t_wall_ms"):
+        for k in ("levels_s", "elapsed_s", "t_wall_ms", "stage"):
             d.pop(k)
         return d
 

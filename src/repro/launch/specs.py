@@ -9,7 +9,6 @@ allocation — for the step function of each cell kind:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ over a single masked-softmax core with two execution paths:
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

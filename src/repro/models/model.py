@@ -262,7 +262,6 @@ def cache_specs(cfg, B, seq_len, rules):
             sh = (mlstm_state_shape(cfg, B) if kind == "mlstm" else
                   slstm_state_shape(cfg, B) if kind == "slstm" else
                   rglru_state_shape(cfg, B))
-            dt = {"mlstm": F32, "slstm": F32, "rglru": None}[kind]
             shapes[f"s{i}"] = {k: jax.ShapeDtypeStruct(
                 (R,) + v, dtype if (kind == "rglru" and k == "conv") else F32)
                 for k, v in sh.items()}
@@ -365,7 +364,6 @@ def encode(params, frames, cfg, rules, opts=None):
     """Whisper encoder over stub frame embeddings (B, enc_seq, d)."""
     x = frames + params["enc"]["pos"][None, :frames.shape[1]].astype(frames.dtype)
     pos = jnp.arange(frames.shape[1])
-    L = cfg.enc_layers
     opts = opts or StepOptions()
 
     def body(h, sl):

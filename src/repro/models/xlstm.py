@@ -24,7 +24,6 @@ def mlstm_init(key, cfg, dtype):
     d = cfg.d_model
     du = 2 * d
     H = cfg.num_heads
-    dh = du // H
     ks = jax.random.split(key, 9)
     return {
         "norm": norm_init(d, cfg.norm, dtype),

@@ -7,8 +7,6 @@ import time
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.data import DataConfig, SyntheticTokenPipeline

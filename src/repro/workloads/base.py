@@ -26,7 +26,7 @@ the workload's traits produces the same numbers (cascade l2 checks this).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.design_space import Directive, violations
 
@@ -142,3 +142,14 @@ class Workload:
              for name, default in self.default_tunables().items()}
         k["contexts"] = max(1, int(d.contexts))
         return k
+
+    def collective_schedule(self, d: Directive):
+        """The trace-time ``CollectiveSchedule`` the directive's build
+        would issue, or ``None`` when the realization has no collective
+        schedule at all (XLA backends, the kv solo tier) — then l0 static
+        verification (``core/verify.py::verify_directive``) is vacuous.
+        Overrides must return exactly the schedule the kernel iterates,
+        built from the same ``kernel_knobs``, so the verifier and the
+        kernel cannot drift."""
+        del d
+        return None

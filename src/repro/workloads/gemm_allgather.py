@@ -137,6 +137,15 @@ class GemmAllGather(Workload):
             counter=d.completion == "COUNTER")
         return k
 
+    def collective_schedule(self, d: Directive):
+        # the deployment-slab broadcast schedule the kernel iterates —
+        # l0 (core/verify.py) statically checks it ahead of l1 build
+        if d.backend == "XLA_COLLECTIVE":
+            return None
+        k = self.kernel_knobs(d)
+        return make_broadcast_schedule(self.n_dev, self.M // self.n_dev,
+                                       k["tile_m"], k["fused"])
+
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":
             if d.placement == "STREAM_SPLIT":

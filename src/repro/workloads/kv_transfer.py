@@ -155,6 +155,16 @@ class KVTransfer(Workload):
             chained=bool(ch))
         return k
 
+    def collective_schedule(self, d: Directive):
+        # the degenerate 2-rank shuttle ring at the deployment tile count
+        # — l0 (core/verify.py) statically checks it ahead of l1 build;
+        # the solo tier moves nothing and verifies vacuously
+        if d.backend == "XLA_COLLECTIVE" or self.n_dev < 2:
+            return None
+        k = self.kernel_knobs(d)
+        return make_ring_schedule(2, self.T, k["kv_chunk"],
+                                  fused=k["fused"])
+
     def _solo_local(self):
         # the single-tier fallback: both projections local, no collective
         def run(x, wk, wv):

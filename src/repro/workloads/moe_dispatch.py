@@ -229,6 +229,16 @@ class MoEDispatch(Workload):
             barrier=d.completion == "BARRIER")
         return k
 
+    def collective_schedule(self, d: Directive):
+        # the exact schedule _make_kernel hands the Pallas kernel at the
+        # deployment token count — l0 (core/verify.py) lowers and checks
+        # it before any build is attempted
+        if d.backend not in ("PALLAS_RDMA", "HYBRID"):
+            return None
+        k = self.kernel_knobs(d)
+        return make_schedule(self._counts(self.T), k["block_tokens"],
+                             k["tight"])
+
     def _make_kernel(self, mesh, d: Directive):
         from repro.kernels.moe_dispatch import moe_dispatch_combine
         k = self.kernel_knobs(d)

@@ -37,7 +37,7 @@ from repro.core.cost_model import (CostBreakdown, CostSegment,
                                    per_tile_exposed_s, window_stall_factor)
 from repro.core.design_space import Directive
 from repro.core.schedule import make_ring_schedule
-from repro.kernels.ref import flash_attention_ref, ring_attention_ref
+from repro.kernels.ref import ring_attention_ref
 from repro.kernels.ring_attention import ring_attention as ring_kernel
 from repro.workloads.base import (BARRIER_OVERHEAD, KERNEL_LAUNCH,
                                   SIGNAL_OVERHEAD, TILE_SYNC, Workload,
@@ -184,6 +184,15 @@ class RingAttention(Workload):
             eager=((d.ordering == "ACQREL" or d.completion == "BARRIER")
                    and not fused))
         return k
+
+    def collective_schedule(self, d: Directive):
+        # the deployment-shard rotation schedule the ring kernel runs —
+        # l0 (core/verify.py) statically checks it ahead of l1 build
+        if d.backend == "XLA_COLLECTIVE":
+            return None
+        k = self.kernel_knobs(d)
+        return make_ring_schedule(self.n_dev, self.sl, k["kv_chunk"],
+                                  fused=k["fused"])
 
     def build(self, d: Directive, mesh):
         if d.backend == "XLA_COLLECTIVE":

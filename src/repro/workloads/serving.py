@@ -45,6 +45,11 @@ class ServingStep(MoEDispatch):
     name = "serving_step"
     ring_topology = False
     kernelizable = True
+    # collective_schedule is inherited from MoEDispatch: the serving step
+    # issues the same dispatch/combine permutation at its decode token
+    # count, so l0 static verification (core/verify.py) covers the
+    # serving tier through the same seam — every kernelized serving
+    # directive is lowered and checked before the engine ever builds it
 
     def __init__(self, n_dev=4, tokens_per_rank=256, d=7168, f=2048,
                  f_shared=2048, skew=1.0, axis="x", route_weights=None):

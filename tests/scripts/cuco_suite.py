@@ -1,9 +1,7 @@
 """CUCo end-to-end: analyzer -> fast path -> slow path on two workloads;
 search invariants (archive dominance, novelty, monotone best-so-far)."""
-import jax
-
-from repro.core import (CascadeEvaluator, SlowPathConfig,
-                        extract_hardware_context, fast_path, slow_path)
+from repro.core import (SlowPathConfig, extract_hardware_context,
+                        fast_path, slow_path)
 from repro.launch.mesh import make_mesh
 from repro.workloads import get_workload
 

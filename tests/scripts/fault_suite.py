@@ -29,7 +29,6 @@ import math
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import extract_hardware_context
 from repro.core.cascade import Candidate, CascadeEvaluator

@@ -2,7 +2,6 @@
 prefill, SP residuals, loss chunking, and MoE overlap/quantize produce the
 same numbers (quantize within int8 tolerance) as the baseline schedule."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -1,0 +1,126 @@
+"""l0 sanitizer suite at 4 simulated ranks: the executable acceptance gate
+of the schedule-verification tier (static-analysis ISSUE).
+
+Covers:
+  * the full lint sweep — every (workload, expert-system) point passes l0
+    (vacuous for the XLA points), every seeded mutation class is rejected
+    with its class-specific first diagnostic (``tools/schedule_lint.py``
+    as a library);
+  * the economics claim behind wiring the verifier in *ahead* of l1/l2:
+    the mean wall-clock of an l0 rejection over the mutation corpus must
+    be under 10% of the mean l2 interpret-verify cost it avoids (measured
+    from real ``CascadeEvaluator`` runs over kernelized points at reduced
+    shapes — ``EvalRecord.levels_s['l2']``);
+  * the ``BENCH_verify.json`` artifact at ``--out``.  Wall-times are
+    machine-dependent, so unlike BENCH_search.json the gate is the
+    *ratio* assert, not byte equality of the regenerated file.
+"""
+import argparse
+import json
+import pathlib
+import statistics
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2]))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2] / "src"))
+
+from tools.schedule_lint import lint_mutations, lint_points  # noqa: E402
+
+from repro.core import extract_hardware_context  # noqa: E402
+from repro.core.cascade import Candidate, CascadeEvaluator  # noqa: E402
+from repro.core.design_space import EXPERT_SYSTEMS  # noqa: E402
+from repro.core.verify import mutation_corpus  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.workloads import get_workload  # noqa: E402
+
+args = argparse.ArgumentParser()
+args.add_argument("--out", default="BENCH_verify.json",
+                  help="path for the l0-vs-l2 economics artifact")
+args.add_argument("--reps", type=int, default=5,
+                  help="timing repetitions per mutation-corpus entry")
+A = args.parse_args()
+
+assert jax.device_count() >= 4, jax.device_count()
+mesh = make_mesh((4,), ("x",))
+hw = extract_hardware_context(mesh)
+
+# ---- the lint sweep: clean points verified, mutations caught --------------
+print("verify_suite: lint sweep (points + mutation corpus)")
+prows, pfail = lint_points(quiet=True)
+assert not pfail, pfail
+n_ok = sum(r["status"] == "ok" for r in prows)
+assert n_ok >= 10, prows
+mrows, mfail = lint_mutations(quiet=True)
+assert not mfail, mfail
+print(f"  {n_ok} kernelized points clean, "
+      f"{len(mrows)} mutation classes caught")
+
+# ---- l0 rejection wall-time over the mutation corpus ----------------------
+print("verify_suite: timing l0 rejections")
+l0_rows = []
+for entry in mutation_corpus():
+    entry["run"]()                                     # warm (imports, JIT-free)
+    times = []
+    for _ in range(A.reps):
+        t0 = time.perf_counter()
+        rep = entry["run"]()
+        times.append((time.perf_counter() - t0) * 1e3)
+    assert not rep.ok and rep.errors[0].code == entry["expect"]
+    l0_rows.append({"class": entry["cls"], "code": entry["expect"],
+                    "l0_ms": statistics.mean(times)})
+    print(f"  {entry['cls']:<24} {l0_rows[-1]['l0_ms']:7.2f} ms "
+          f"[{entry['expect']}]")
+
+# ---- the l2 interpret cost those rejections avoid -------------------------
+# Real cascade runs over kernelized points at reduced shapes: the l2 level
+# interpret-executes the actual Pallas kernel, which is the work a mutant
+# schedule would have burned before failing the output compare.
+print("verify_suite: measuring avoided l2 interpret cost")
+POINTS = [
+    ("moe_dispatch", dict(n_dev=4, tokens_per_rank=32, d=32, f=64),
+     ("FLUX", "DeepEP (NVL)")),
+    ("gemm_allgather", dict(n_dev=4, M=256, K=128, N=128),
+     ("FLUX",)),
+    ("ring_attention", dict(n_dev=4, BH=2, seq=256, hd=32),
+     ("FLUX", "DeepEP (NVL)")),
+]
+l2_rows = []
+for wname, kw, pnames in POINTS:
+    w = get_workload(wname, **kw)
+    ev = CascadeEvaluator(w, mesh, hw)
+    for pname in pnames:
+        d = EXPERT_SYSTEMS[pname]
+        if w.check(d, hw):
+            continue
+        res = ev.evaluate(Candidate(directive=d))
+        assert res.ok, (wname, pname, res.diagnostic)
+        rec = res.record
+        assert "l0" in rec.levels_s and "l2" in rec.levels_s
+        l2_rows.append({"workload": wname, "point": pname,
+                        "level": res.level,
+                        "l0_ms": rec.levels_s["l0"] * 1e3,
+                        "l2_ms": rec.levels_s["l2"] * 1e3})
+        print(f"  {wname:<16} {pname:<14} l0 {l2_rows[-1]['l0_ms']:6.1f} ms"
+              f"   l2 {l2_rows[-1]['l2_ms']:8.1f} ms")
+
+# ---- the economics gate ---------------------------------------------------
+l0_mean = statistics.mean(r["l0_ms"] for r in l0_rows)
+l2_mean = statistics.mean(r["l2_ms"] for r in l2_rows)
+ratio = l0_mean / l2_mean
+payload = {
+    "schema": "verify-bench/v1",
+    "l0_rejections": l0_rows,
+    "l2_interpret": l2_rows,
+    "summary": {"l0_mean_ms": l0_mean, "l2_mean_ms": l2_mean,
+                "ratio": ratio},
+}
+with open(A.out, "w") as f:
+    json.dump(payload, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"verify_suite: l0 mean {l0_mean:.2f} ms vs l2 mean {l2_mean:.1f} ms "
+      f"-> ratio {ratio:.4f} (gate < 0.1)")
+assert ratio < 0.1, (l0_mean, l2_mean)
+print("verify_suite: ALL OK ->", A.out)

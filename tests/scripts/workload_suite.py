@@ -1,7 +1,6 @@
 """Every workload x a spread of valid directives verifies against the oracle
 (semantics-preserving builders — the cascade l2 invariant)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.design_space import Directive

@@ -8,7 +8,6 @@ counterparts live in tests/scripts/collective_kernels_suite.py.
 """
 import dataclasses
 
-import pytest
 
 from repro.core.cost_model import per_tile_exposed_s
 from repro.core.design_space import EXPERT_SYSTEMS, TUNABLES, Directive

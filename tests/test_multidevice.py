@@ -7,7 +7,6 @@ import pathlib
 import subprocess
 import sys
 
-import pytest
 
 SCRIPTS = pathlib.Path(__file__).parent / "scripts"
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")

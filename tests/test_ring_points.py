@@ -9,7 +9,6 @@ counterparts live in tests/scripts/ring_kernel_suite.py.
 """
 import dataclasses
 
-import pytest
 
 from repro.core.cost_model import per_tile_exposed_s, window_stall_factor
 from repro.core.design_space import EXPERT_SYSTEMS, TUNABLES, Directive

@@ -22,7 +22,7 @@ import jax
 import pytest
 
 from repro.core import (CONSERVATIVE, Candidate, CandidateDB,
-                        CascadeEvaluator, SlowPathConfig, directive_key,
+                        CascadeEvaluator, SlowPathConfig,
                         extract_hardware_context, fast_path, random_directive,
                         slow_path)
 from repro.core.faults import STRAGGLER, FaultPlan, FaultSpec

@@ -21,7 +21,6 @@ on hosts with fewer than 4 devices.
 import random
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

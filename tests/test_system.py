@@ -10,11 +10,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch, reduced
-from repro.core import (CONSERVATIVE, Candidate, CascadeEvaluator,
-                        MetaSummarizer, SlowPathConfig, Directive,
+from repro.core import (Candidate, CascadeEvaluator, MetaSummarizer,
+                        SlowPathConfig, Directive,
                         extract_hardware_context, fast_path, slow_path)
 from repro.launch.mesh import make_mesh
 from repro.models import init_params

@@ -19,7 +19,6 @@ The executable 4-rank probe counterpart (observed DMA order vs the
 trace-time schedule) lives in tests/scripts/telemetry_suite.py.
 """
 import json
-import math
 
 import pytest
 
